@@ -1,0 +1,101 @@
+"""Aggregate artifacts/dryrun/*.json into the EXPERIMENTS.md roofline
+tables.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline_report [--dir artifacts/dryrun]
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6)):
+        if x >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def fmt_gib(b) -> str:
+    return f"{(b or 0) / 2**30:.2f}"
+
+
+def load(dirpath: str) -> list[dict]:
+    rows = []
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+ARCH_ORDER = [
+    "whisper-medium", "command-r-plus-104b", "mistral-large-123b",
+    "stablelm-3b", "smollm-135m", "arctic-480b", "moonshot-v1-16b-a3b",
+    "rwkv6-3b", "jamba-1.5-large-398b", "qwen2-vl-2b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def table(rows: list[dict], mesh: str) -> str:
+    out = [
+        "| arch | shape | peak GiB/dev | compute | memory | collective | "
+        "bottleneck | MODEL/HLO | coll ops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    sel = [r for r in rows if r.get("mesh") == mesh]
+    sel.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                            SHAPE_ORDER.index(r["shape"])))
+    for r in sel:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_gib(r['memory']['peak_bytes'])} | "
+            f"{fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} | "
+            f"{fmt_s(t['collective_s'])} | **{t['bottleneck']}** | "
+            f"{t['useful_flops_ratio']:.2f} | "
+            f"{r['collectives']['count_by_kind']} |")
+    return "\n".join(out)
+
+
+def summary(rows: list[dict]) -> str:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    by_mesh: dict[str, int] = {}
+    for r in ok:
+        by_mesh[r["mesh"]] = by_mesh.get(r["mesh"], 0) + 1
+    lines = [f"- compiled cells: " + ", ".join(
+        f"{k}: {v}" for k, v in sorted(by_mesh.items()))]
+    bn: dict[str, int] = {}
+    for r in ok:
+        b = r["roofline"]["bottleneck"]
+        bn[b] = bn.get(b, 0) + 1
+    lines.append(f"- bottleneck distribution: {bn}")
+    worst = sorted(
+        (r for r in ok if r["mesh"] == "pod16x16"),
+        key=lambda r: r["roofline"]["useful_flops_ratio"])[:3]
+    lines.append("- worst MODEL/HLO ratios (single pod): " + ", ".join(
+        f"{r['arch']}×{r['shape']}={r['roofline']['useful_flops_ratio']:.2f}"
+        for r in worst))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print("## Roofline — single pod (16x16 = 256 chips)\n")
+    print(table(rows, "pod16x16"))
+    print("\n## Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(table(rows, "pod2x16x16"))
+    print("\n## Summary\n")
+    print(summary(rows))
+
+
+if __name__ == "__main__":
+    main()

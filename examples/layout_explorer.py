@@ -1,0 +1,52 @@
+"""Design-space exploration with Iris (paper §1: "rapid design-space
+exploration while tuning the width of custom-precision data types").
+
+Sweeps quantization widths for a model layer bundle and prints the
+bandwidth/lateness/staging frontier, plus the paper's Table 6-style
+delta/W constraint sweep.
+
+Run:  PYTHONPATH=src python examples/layout_explorer.py [--arch smollm-135m]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core.dse import sweep_max_lanes, sweep_widths
+from repro.core.packing import serving_stream_report
+from repro.core.task import INV_HELMHOLTZ, matmul_problem
+from repro.quant import QuantSpec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+
+    print("=== Custom-precision width sweep (paper Table 7 style) ===")
+    print(f"{'widths':>12s} {'naive eff':>10s} {'iris eff':>10s} "
+          f"{'iris C_max':>10s} {'iris L_max':>10s}")
+    for row in sweep_widths(matmul_problem, [(64, 64), (48, 40), (33, 31),
+                                             (30, 19), (17, 13)]):
+        print(f"{row['widths']!s:>12s} {row['naive_eff']:>10.3f} "
+              f"{row['iris_eff']:>10.3f} {row['iris_cmax']:>10d} "
+              f"{row['iris_lmax']:>10d}")
+
+    print("\n=== delta/W constraint sweep (paper Table 6 style) ===")
+    print(f"{'d/W':>4s} {'eff':>8s} {'L_max':>7s} {'fifo':>8s}")
+    for row in sweep_max_lanes(INV_HELMHOLTZ, [None, 4, 3, 2, 1]):
+        print(f"{str(row['max_lanes']):>4s} {row['eff']:>8.3f} "
+              f"{row['lmax']:>7d} {row['fifo']:>8d}")
+
+    print(f"\n=== Serving-stream DSE for {args.arch} ===")
+    cfg = get_config(args.arch)
+    print(f"{'bits':>4s} {'iris MiB/L':>11s} {'pad MiB/L':>10s} "
+          f"{'bf16 MiB/L':>11s} {'B_eff':>7s}")
+    for bits in (3, 4, 5, 6, 8):
+        r = serving_stream_report(cfg, QuantSpec(bits=bits, group_size=128))
+        print(f"{bits:>4d} {r['iris_MiB_per_layer']:>11.2f} "
+              f"{r['padded_MiB_per_layer']:>10.2f} "
+              f"{r['bf16_MiB_per_layer']:>11.2f} "
+              f"{r['iris_efficiency']:>7.4f}")
+
+
+if __name__ == "__main__":
+    main()

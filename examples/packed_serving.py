@@ -1,0 +1,92 @@
+"""End-to-end driver (the paper's kind: serving/data movement): serve a
+small LM with batched requests where the decode-step weights are
+int-quantized, Iris-organized, and dequantized on load by the Pallas
+matmul — dense bf16 weights never exist in memory.
+
+Reports per-token weight-streaming bytes vs the bf16 and padded-int
+baselines (the memory-roofline win of the paper's technique), plus the
+Iris layout metrics of the per-layer stream bundles.
+
+Run:  PYTHONPATH=src python examples/packed_serving.py [--bits 8]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.packing import layer_bundle_spec, pack_bundle
+from repro.models.model import Model
+from repro.models.quantized import (
+    bytes_per_token_report,
+    packed_decode_step,
+    quantize_params,
+)
+from repro.quant import QuantSpec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m").reduced(
+        n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+        vocab_size=512, head_dim=64)
+    model = Model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    spec = QuantSpec(bits=args.bits, group_size=64)
+
+    print(f"=== Quantize + pack ({args.bits}-bit, model {cfg.name} "
+          f"reduced) ===")
+    pp = quantize_params(cfg, params, spec)
+    rep = bytes_per_token_report(cfg, pp)
+    print(f"weight stream per decode token: packed={rep['packed_MiB']:.2f} "
+          f"MiB  padded-int={rep['padded_int_MiB']:.2f} MiB  "
+          f"bf16={rep['bf16_MiB']:.2f} MiB")
+    print(f"reduction vs bf16: {rep['bf16_MiB']/rep['packed_MiB']:.2f}x")
+
+    print("\n=== Iris stream layout per layer ===")
+    bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, spec)
+    pb = pack_bundle(bundle, m=512)
+    print(f"B_eff={pb.metrics_iris['B_eff']:.4f} "
+          f"L_max={pb.metrics_iris['L_max']} "
+          f"(homogeneous: {pb.metrics_homogeneous['L_max']}); "
+          f"decode units={pb.decode_plan().n_units}")
+
+    print("\n=== Batched generation (packed decode path) ===")
+    state = model.init_decode_state(args.batch, max_seq=64)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, args.batch),
+                       dtype=jnp.int32)
+    outs = [[] for _ in range(args.batch)]
+    t0 = time.perf_counter()
+    for _ in range(args.new_tokens):
+        logits, state = packed_decode_step(cfg, pp, state, toks,
+                                           interpret=True)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(args.batch):
+            outs[i].append(int(toks[i]))
+    dt = time.perf_counter() - t0
+    for i, o in enumerate(outs):
+        print(f"request {i}: {o}")
+    print(f"\n{args.batch * args.new_tokens} tokens in {dt:.1f}s "
+          f"(interpret-mode Pallas on CPU; TPU is the lowering target)")
+
+    # cross-check against the dense path for the first step
+    state2 = model.init_decode_state(args.batch, max_seq=64)
+    t = jnp.asarray(rng.integers(0, cfg.vocab_size, args.batch), jnp.int32)
+    dlog, _ = jax.jit(model.decode_step)(params, state2, t, None)
+    qlog, _ = packed_decode_step(cfg, pp, state2, t, interpret=True)
+    agree = float((np.argmax(np.asarray(dlog), -1)
+                   == np.argmax(np.asarray(qlog), -1)).mean())
+    print(f"top-1 agreement packed vs dense: {agree:.0%}  [OK]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Train a language model end to end with the fault-tolerant runtime.
+
+Default preset trains a ~20M-param smollm-family model for 300 steps on
+the structured synthetic stream (loss drops well below the unigram
+floor).  ``--preset full`` uses the real smollm-135m config (~135M params
+— hours on this CPU container; the default preset exercises every code
+path at a size the container can finish).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.launch.steps import build_train_step, init_train_state
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", choices=["small", "full"], default="small")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="artifacts/train_lm_ckpt")
+    args = ap.parse_args()
+
+    base = get_config("smollm-135m")
+    if args.preset == "full":
+        cfg = base
+    else:
+        cfg = base.reduced(n_layers=6, d_model=384, n_heads=6,
+                           n_kv_heads=2, d_ff=1024, vocab_size=2048,
+                           head_dim=64, max_seq_len=args.seq_len)
+    n_params = cfg.param_count()
+    print(f"config: {cfg.n_layers}L d={cfg.d_model} "
+          f"({n_params/1e6:.1f}M params), seq={args.seq_len}, "
+          f"batch={args.batch}, steps={args.steps}")
+
+    step_fn = jax.jit(
+        build_train_step(cfg, AdamWConfig(
+            lr=3e-3, warmup_steps=20, total_steps=args.steps)),
+        donate_argnums=(0,))
+    pipe = SyntheticLMPipeline(cfg.vocab_size, args.seq_len, args.batch,
+                               seed=0)
+    ckpt = pathlib.Path(args.ckpt)
+    rep = run_training(
+        step_fn, lambda: init_train_state(cfg, jax.random.PRNGKey(0)),
+        pipe, str(ckpt),
+        TrainLoopConfig(total_steps=args.steps,
+                        ckpt_interval=max(10, args.steps // 6),
+                        log_interval=10))
+    ls = rep.losses
+    uniform = float(np.log(cfg.vocab_size))
+    print(f"restarts={rep.restarts} stragglers={rep.stragglers} "
+          f"resumed_from={rep.resumed_from}")
+    if not ls:
+        print("nothing to do (already trained to --steps; "
+              "use a fresh --ckpt to retrain)")
+        return
+    print(f"loss: start={ls[0]:.3f}  step50={ls[min(49, len(ls)-1)]:.3f}  "
+          f"final={rep.final_loss:.3f}  (uniform={uniform:.3f})")
+    tail = float(np.mean(ls[-10:]))
+    assert tail < 0.8 * uniform, f"model failed to learn ({tail:.3f})"
+    print("loss well below the uniform floor  [OK]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config("<arch-id>")``.
+
+Every assigned architecture (10) plus the paper's own accelerator inputs
+(``paper_accels``).  IDs match the assignment exactly.
+"""
+from __future__ import annotations
+
+from .base import SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+
+_REGISTRY: dict[str, str] = {
+    "whisper-medium": "whisper_medium",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "mistral-large-123b": "mistral_large_123b",
+    "stablelm-3b": "stablelm_3b",
+    "smollm-135m": "smollm_135m",
+    "arctic-480b": "arctic_480b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "rwkv6-3b": "rwkv6_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    return mod.CONFIG
+
+
+def shape_cells(arch: str) -> list[ShapeConfig]:
+    """The runnable shape cells for an arch (long_500k needs sub-quadratic
+    attention; skips are recorded in DESIGN.md §Arch-applicability)."""
+    cfg = get_config(arch)
+    cells = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.subquadratic:
+        cells.append(SHAPES["long_500k"])
+    return cells

@@ -1,0 +1,25 @@
+"""arctic-480b [moe] — hf:Snowflake/snowflake-arctic-base.
+
+35L, d_model=7168, 56H (GQA kv=8), vocab=32000; MoE 128 experts top-2
+(d_expert=4864) with a dense residual MLP in parallel (arctic's
+dense-MoE hybrid).
+"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    moe=MoEConfig(
+        n_experts=128,
+        top_k=2,
+        d_expert=4864,
+        dense_residual_ff=4864,
+    ),
+    max_seq_len=32_768,
+)

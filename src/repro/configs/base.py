@@ -1,0 +1,241 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the
+full configs live in one module per architecture (``repro.configs.<id>``)
+and reduced smoke variants are derived with :meth:`ModelConfig.reduced`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+    # Arctic: dense residual MLP in parallel with the experts
+    dense_residual_ff: int | None = None
+    # apply MoE every `every` layers (jamba: alternate dense/MoE)
+    every: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-family SSM block, in SSD (scalar-decay head) form.
+
+    DESIGN.md §Hardware-adaptation: Mamba1's per-(channel, state) decay has
+    no TPU-friendly tiling without bespoke kernels; we use the Mamba-2 SSD
+    parameterization (per-head scalar decay), which has the same state size
+    and asymptotics and maps onto MXU matmuls.
+    """
+
+    d_state: int = 64             # state per head (dk = dv = d_state)
+    expand: int = 2               # d_inner = expand * d_model
+    head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64          # low-rank size of the data-dependent decay
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec models (whisper)."""
+
+    n_layers: int
+    n_ctx: int                    # encoder positions (audio frames)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                       # 0 -> d_model // n_heads
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rwkv: RWKVConfig | None = None
+    encoder: EncoderConfig | None = None
+    attn_every: int = 1                     # jamba: 1 attn per N layers
+    frontend: Literal[None, "audio", "vision"] = None
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, int, int] | None = None   # qwen2-vl M-RoPE
+    max_seq_len: int = 1 << 19
+    dtype: str = "bfloat16"
+    kv_cache_dtype: str = ""                # "" = model dtype;
+                                            # "float8_e5m2" halves KV bytes
+    subquadratic: bool = False              # eligible for long_500k
+
+    def __post_init__(self) -> None:
+        if self.n_heads > 0:
+            hd = self.head_dim or self.d_model // self.n_heads
+            object.__setattr__(self, "head_dim", hd)
+            if self.n_heads % max(1, self.n_kv_heads):
+                raise ValueError("n_heads must be a multiple of n_kv_heads")
+
+    # ------------------------------------------------------------------
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def layer_is_attn(self, layer_idx: int) -> bool:
+        """Hybrid interleave: layer i uses attention iff this returns True."""
+        if self.attention_free:
+            return False
+        if self.attn_every <= 1:
+            return True
+        # jamba: one attention layer per `attn_every`, at the end of a period
+        return layer_idx % self.attn_every == self.attn_every - 1
+
+    def layer_is_moe(self, layer_idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return layer_idx % self.moe.every == self.moe.every - 1
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + per-layer blocks)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        total = v * d                      # embeddings
+        if not self.tie_embeddings:
+            total += v * d                 # unembed
+        for i in range(self.n_layers):
+            if self.layer_is_attn(i):
+                total += d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                total += self.n_heads * hd * d
+            elif self.family in ("ssm",) and self.rwkv is not None:
+                total += 5 * d * d + 2 * d * self.rwkv.decay_lora
+            elif self.ssm is not None:
+                di = self.ssm.expand * d
+                total += 2 * d * di + di * d + di
+            if self.layer_is_moe(i):
+                moe = self.moe
+                total += d * moe.n_experts
+                total += moe.n_experts * 3 * d * moe.d_expert
+                if moe.dense_residual_ff:
+                    total += 3 * d * moe.dense_residual_ff
+            else:
+                total += 3 * d * f
+            total += 2 * d                 # norms
+        if self.encoder is not None:
+            for _ in range(self.encoder.n_layers):
+                total += d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                total += self.n_heads * hd * d + 3 * d * f + 2 * d
+            # decoder cross-attention
+            total += self.n_layers * (d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        moe = self.moe
+        inactive_frac = 1 - moe.top_k / moe.n_experts
+        expert_params = sum(
+            moe.n_experts * 3 * self.d_model * moe.d_expert
+            for i in range(self.n_layers)
+            if self.layer_is_moe(i)
+        )
+        return self.param_count() - int(expert_params * inactive_frac)
+
+    # ------------------------------------------------------------------
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A small same-family config for CPU smoke tests."""
+        changes: dict = dict(
+            n_layers=min(self.n_layers, 2 if self.attn_every <= 1
+                         else 2 * self.attn_every),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32,
+            max_seq_len=256,
+        )
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 8),
+                top_k=min(self.moe.top_k, 2),
+                d_expert=64,
+                dense_residual_ff=(64 if self.moe.dense_residual_ff else None),
+            )
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=32)
+        if self.rwkv is not None:
+            changes["rwkv"] = dataclasses.replace(
+                self.rwkv, head_dim=32, decay_lora=16)
+        if self.encoder is not None:
+            changes["encoder"] = dataclasses.replace(
+                self.encoder, n_layers=2, n_ctx=32)
+        if self.mrope_sections is not None:
+            # rescale sections to the reduced head_dim (channels = hd/2)
+            hd = changes["head_dim"]
+            total = sum(self.mrope_sections)
+            t = self.mrope_sections[0] * (hd // 2) // total
+            h = self.mrope_sections[1] * (hd // 2) // total
+            changes["mrope_sections"] = (t, h, hd // 2 - t - h)
+        changes.update(overrides)
+        return dataclasses.replace(self, **changes)
+
+    def with_tp(self, tp: int) -> "ModelConfig":
+        """Adjust for tensor parallelism:
+
+        * replicate KV heads to a multiple of the model axis when
+          n_kv_heads doesn't divide it (standard GQA TP practice);
+        * pad the vocab to a multiple of the axis (Megatron-style) so
+          the logits/CE path shards — an unshardable vocab replicates
+          O(B*S*V) f32 tensors per device (measured: whisper train
+          +12.7 GiB/dev per tensor; EXPERIMENTS §Perf cell E).
+
+        The model function is unchanged (padded logit rows simply learn
+        to be improbable; labels never reference them)."""
+        out = self
+        pad = (-out.vocab_size) % tp
+        if pad:
+            out = dataclasses.replace(out,
+                                      vocab_size=out.vocab_size + pad)
+        if out.n_kv_heads == 0 or out.n_kv_heads % tp == 0:
+            return out
+        reps = -(-tp // out.n_kv_heads)        # ceil
+        new_kv = out.n_kv_heads * reps
+        if new_kv % tp and tp % new_kv:
+            # fall back: replicate to lcm so the axis divides or is unused
+            import math
+            new_kv = out.n_kv_heads * tp // math.gcd(out.n_kv_heads, tp)
+        if out.n_heads % new_kv:
+            return out                         # keep GQA grouping legal
+        return dataclasses.replace(out, n_kv_heads=new_kv)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,20 @@
+"""command-r-plus-104b [dense] — hf:CohereForAI/c4ai-command-r-plus.
+
+64L, d_model=12288, 96H (GQA kv=8), d_ff=33792, vocab=256000, no biases.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    norm="layernorm",
+    use_bias=False,
+    rope_theta=75_000_000.0,
+    max_seq_len=131_072,
+)

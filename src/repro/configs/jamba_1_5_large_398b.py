@@ -1,0 +1,24 @@
+"""jamba-1.5-large-398b [hybrid] — arXiv:2403.19887.
+
+72L, d_model=8192, 64H (GQA kv=8), d_ff=24576, vocab=65536; Mamba+attention
+1:7 interleave (1 attention layer per 8), MoE 16 experts top-2 on every
+second layer.  Sub-quadratic: runs long_500k (sequence-sharded KV on the 9
+attention layers).
+"""
+from .base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    attn_every=8,
+    moe=MoEConfig(n_experts=16, top_k=2, d_expert=24576, every=2),
+    ssm=SSMConfig(d_state=64, expand=2, head_dim=64),
+    subquadratic=True,
+    max_seq_len=1 << 20,
+)

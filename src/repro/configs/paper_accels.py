@@ -1,0 +1,2 @@
+"""The paper's own accelerator inputs (Table 5), as layout-problem configs."""
+from repro.core.task import INV_HELMHOLTZ, PAPER_EXAMPLE, matmul_problem  # noqa: F401

@@ -1,0 +1,24 @@
+"""qwen2-vl-2b [vlm] — arXiv:2409.12191.
+
+28L, d_model=1536, 12H (GQA kv=2), d_ff=8960, vocab=151936; M-RoPE
+(temporal/height/width sections).  The vision frontend is a STUB per the
+assignment: ``input_specs()`` provides precomputed patch embeddings.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    frontend="vision",
+    use_bias=True,
+    tie_embeddings=True,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    max_seq_len=32_768,
+)

@@ -1,0 +1,21 @@
+"""rwkv6-3b [ssm] — Finch, arXiv:2404.05892 (attention-free).
+
+32L, d_model=2560, d_ff=8960, vocab=65536; RWKV-6 time-mix with
+data-dependent per-channel decay.  Sub-quadratic: runs long_500k.
+"""
+from .base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,              # time-mix heads, head_dim 64
+    n_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64),
+    act="relu_squared",      # rwkv channel-mix uses squared relu
+    subquadratic=True,
+    max_seq_len=1 << 20,
+)

@@ -1,0 +1,25 @@
+"""whisper-medium [audio enc-dec] — arXiv:2212.04356.
+
+24L decoder (+24L encoder), d_model=1024, 16H (GQA kv=16), d_ff=4096,
+vocab=51865.  The conv audio frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed (B, 1500, d_model) frame embeddings.
+"""
+from .base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    encoder=EncoderConfig(n_layers=24, n_ctx=1500),
+    frontend="audio",
+    act="gelu",
+    norm="layernorm",
+    use_bias=True,
+    rope_theta=0.0,            # whisper uses learned/sinusoidal positions
+    max_seq_len=32_768,        # stress config per assignment shapes
+)

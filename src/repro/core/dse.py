@@ -1,0 +1,52 @@
+"""Design-space exploration helpers (paper §1: Iris enables rapid DSE
+over custom-precision widths and the delta/W resource/efficiency knob)."""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from .baselines import homogeneous_layout
+from .iris import schedule
+from .task import LayoutProblem, make_problem
+
+
+def sweep_widths(problem_fn: Callable[..., LayoutProblem],
+                 width_pairs: Sequence[tuple[int, int]]) -> list[dict]:
+    """Paper Table 7: metrics across custom element widths."""
+    out = []
+    for widths in width_pairs:
+        p = problem_fn(*widths)
+        nm = homogeneous_layout(p).metrics()
+        im = schedule(p).metrics()
+        out.append({
+            "widths": widths,
+            "naive_eff": nm.efficiency,
+            "naive_cmax": nm.c_max,
+            "naive_lmax": nm.l_max,
+            "iris_eff": im.efficiency,
+            "iris_cmax": im.c_max,
+            "iris_lmax": im.l_max,
+            "iris_fifo": sum(im.fifo_depth.values()),
+            "naive_fifo": sum(nm.fifo_depth.values()),
+        })
+    return out
+
+
+def sweep_max_lanes(problem: LayoutProblem,
+                    lane_caps: Sequence[int | None]) -> list[dict]:
+    """Paper Table 6: the delta/W knob trades efficiency for decode
+    resources (FIFO write ports)."""
+    out = []
+    for cap in lane_caps:
+        p = make_problem(
+            problem.m,
+            [(a.name, a.width, a.depth, a.due) for a in problem.arrays],
+            max_lanes=cap)
+        m = schedule(p).metrics()
+        out.append({
+            "max_lanes": cap,
+            "eff": m.efficiency,
+            "cmax": m.c_max,
+            "lmax": m.l_max,
+            "fifo": sum(m.fifo_depth.values()),
+        })
+    return out

@@ -1,0 +1,222 @@
+"""Iris layout scheduler (paper Algorithms 1.1, 1.2, 1.3).
+
+The bus-layout problem is solved as preemptive multiprocessor scheduling of
+linear-speedup tasks (Drozdowski 1996): the m-bit bus is m identical
+processors, array j is a task with processing time ``p_j = W_j * D_j``,
+maximum parallelism ``delta_j = floor(m/W_j)*W_j``, and release time
+``r_j = d_max - d_j``.  The schedule is computed forward in release-time
+space and reversed into due-date space to optimize ``L_max``.
+
+Two execution modes:
+
+* ``cycle``    — re-run FIND_CAPABILITIES every bus cycle.  Exact w.r.t.
+  element indivisibility and integral heights; used for paper-scale
+  problems and all reproduction tests.
+* ``interval`` — the paper's event-driven form: compute one allocation and
+  jump ``tau = min(tau', tau'', next-release)`` cycles at once (Alg 1.1
+  lines 8-13).  O(events) instead of O(C_max); required for model-packing
+  problems with millions of cycles.  Produces the same allocations at event
+  boundaries; transient single-cycle tie-group differences may shift
+  metrics by O(1) cycles (property-tested against ``cycle`` mode).
+
+Deviations from the paper's pseudocode are deliberate and documented in
+DESIGN.md §2 (the pseudocode has typos; our resolution reproduces every
+worked number in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from .layout import Counts, Layout
+from .task import LayoutProblem
+
+
+@dataclasses.dataclass
+class _Task:
+    idx: int          # index into problem.arrays
+    width: int
+    release: int
+    delta: int        # max bits/cycle (already max_lanes-clamped)
+    rem: int          # remaining elements
+
+    @property
+    def delta_eff(self) -> int:
+        """Usable width right now: never claim lanes beyond remaining work."""
+        return min(self.delta, self.rem * self.width)
+
+    @property
+    def lanes_eff(self) -> int:
+        return self.delta_eff // self.width
+
+    @property
+    def height(self) -> int:
+        """h(j) = ceil(rem / lanes) — remaining cycles at max parallelism."""
+        return -(-self.rem // self.lanes_eff)
+
+    @property
+    def frac_height(self) -> float:
+        return self.rem / self.lanes_eff
+
+
+def _lrm_allocation(group: list[_Task], avail: int) -> dict[int, int]:
+    """Largest-remainder (Hamilton) apportionment in element-width seats.
+
+    Paper Alg 1.3, with the §4 modification: allocations are whole
+    multiples of each element's bitwidth (elements are indivisible).
+    Returns {task_idx: beta_bits}; beta is a multiple of W and <= delta_eff.
+    """
+    total = sum(t.delta_eff for t in group)
+    assert total > avail > 0
+    beta: dict[int, int] = {}
+    rem_frac: list[tuple[float, int, _Task]] = []
+    for order, t in enumerate(group):
+        v = t.delta_eff * avail / total          # fair fractional share
+        b = min((int(v) // t.width) * t.width, t.delta_eff)
+        beta[t.idx] = b
+        rem_frac.append((v - b, order, t))
+    spent = sum(beta.values())
+    left = avail - spent
+    # hand out remaining seats (one element = W_j bits) by largest remainder
+    rem_frac.sort(key=lambda x: (-x[0], x[1]))
+    progressed = True
+    while left > 0 and progressed:
+        progressed = False
+        for _, _, t in rem_frac:
+            if left >= t.width and beta[t.idx] + t.width <= t.delta_eff:
+                beta[t.idx] += t.width
+                left -= t.width
+                progressed = True
+                if left == 0:
+                    break
+    return beta
+
+
+def _find_capabilities(ready: list[_Task], m: int,
+                       fill_residual: bool) -> list[tuple[_Task, int]]:
+    """Paper Alg 1.2: allocate bus bits to the highest tasks first.
+
+    Returns [(task, beta_bits)] in allocation (lane) order, beta > 0.
+    ``fill_residual=False`` is the paper-faithful behaviour (avail := 0
+    after an LRM round, line 27); ``True`` keeps offering leftover bits to
+    lower groups — a beyond-paper refinement measured in EXPERIMENTS.md.
+    """
+    avail = m
+    out: list[tuple[_Task, int]] = []
+    # group by equal height, tallest first; stable within a group
+    by_height: dict[int, list[_Task]] = {}
+    for t in ready:
+        by_height.setdefault(t.height, []).append(t)
+    for h in sorted(by_height, reverse=True):
+        if avail <= 0:
+            break
+        group = by_height[h]
+        total = sum(t.delta_eff for t in group)
+        if total <= avail:
+            for t in group:
+                out.append((t, t.delta_eff))
+            avail -= total
+        else:
+            beta = _lrm_allocation(group, avail)
+            spent = 0
+            for t in group:
+                b = beta.get(t.idx, 0)
+                if b > 0:
+                    out.append((t, b))
+                    spent += b
+            avail -= spent
+            if not fill_residual:
+                break          # paper line 27: avail := 0
+    return out
+
+
+def _tau_jump(ready: list[_Task], alloc: list[tuple[_Task, int]],
+              next_release: int | None, t_now: int) -> int:
+    """Event horizon: paper Alg 1.1 lines 8-13 (tau', tau'', next release)."""
+    taus: list[float] = []
+    # tau'': earliest completion of any allocated task at its current rate
+    for task, beta in alloc:
+        n = beta // task.width
+        taus.append(task.rem // n)           # full cycles it can sustain
+    # tau': first height equalization between adjacent rate-diverse tasks
+    rates = {t.idx: 0.0 for t in ready}
+    for task, beta in alloc:
+        rates[task.idx] = beta / task.delta_eff
+    ordered = sorted(ready, key=lambda t: -t.frac_height)
+    for a, b in zip(ordered, ordered[1:]):
+        ra, rb = rates[a.idx], rates[b.idx]
+        ha, hb = a.frac_height, b.frac_height
+        if ha > hb and ra > rb:
+            taus.append((ha - hb) / (ra - rb))
+    if next_release is not None:
+        taus.append(next_release - t_now)
+    tau = int(math.floor(min(taus)))
+    return max(1, tau)
+
+
+def schedule(problem: LayoutProblem, *, mode: str = "auto",
+             fill_residual: bool = False,
+             _cycle_limit: int = 1 << 16) -> Layout:
+    """Run Iris on ``problem`` and return the due-date-space :class:`Layout`.
+
+    mode: 'cycle' (exact, O(C_max)), 'interval' (event-driven, O(events)),
+    or 'auto' (cycle below ``_cycle_limit`` estimated cycles).
+    """
+    if mode not in ("auto", "cycle", "interval"):
+        raise ValueError(f"unknown mode {mode!r}")
+    prob = problem
+    d_max = prob.d_max
+    tasks = [
+        _Task(
+            idx=i,
+            width=a.width,
+            release=d_max - a.due,
+            delta=a.delta(prob.m),
+            rem=a.depth,
+        )
+        for i, a in enumerate(prob.arrays)
+    ]
+    if mode == "auto":
+        est = sum(t.rem * t.width for t in tasks) / prob.m + d_max
+        mode = "cycle" if est <= _cycle_limit else "interval"
+
+    releases = sorted({t.release for t in tasks})
+    forward: list[tuple[int, Counts]] = []
+    t_now = 0
+    pending = sorted(tasks, key=lambda t: t.release)
+    ready: list[_Task] = []
+    pi = 0
+
+    while pi < len(pending) or any(t.rem > 0 for t in ready):
+        # admit newly released tasks (stable: release order, then input order)
+        while pi < len(pending) and pending[pi].release <= t_now:
+            ready.append(pending[pi])
+            pi += 1
+        ready = [t for t in ready if t.rem > 0]
+        if not ready:
+            # idle until the next release; idle cycles are *not* emitted —
+            # dropping them in due-date space only reduces lateness
+            assert pi < len(pending)
+            t_now = pending[pi].release
+            continue
+        next_release = pending[pi].release if pi < len(pending) else None
+        alloc = _find_capabilities(ready, prob.m, fill_residual)
+        assert alloc, "FIND_CAPABILITIES must allocate at least one task"
+        if mode == "cycle":
+            tau = 1
+        else:
+            tau = _tau_jump(ready, alloc, next_release, t_now)
+        counts: Counts = tuple(
+            (task.idx, beta // task.width) for task, beta in alloc
+        )
+        if forward and forward[-1][1] == counts:
+            forward[-1] = (forward[-1][0] + tau, counts)
+        else:
+            forward.append((tau, counts))
+        for task, beta in alloc:
+            task.rem -= tau * (beta // task.width)
+            assert task.rem >= 0
+        t_now += tau
+
+    return Layout.from_count_intervals(prob, forward, reverse=True)

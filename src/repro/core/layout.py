@@ -1,0 +1,341 @@
+"""Layout IR: the output of the Iris scheduler and its metrics.
+
+A :class:`Layout` assigns every element of every array to a (cycle, bit
+offset) position on the bus.  Layouts are produced forward in *release-time*
+space by the scheduler and reversed into *due-date* space (paper §4: "the
+final layout must be reversed to target L_max").
+
+The ground-truth representation is **interval-native**: a list of
+(n_cycles, counts) runs where ``counts`` is the constant per-cycle slot
+structure ``(array, elems_per_cycle)`` in lane order.  This is what the
+paper's Listing 1 exploits with ``for`` loops, what our Pallas decode kernel
+is gridded over, and what keeps billion-element model-packing problems
+tractable (metrics and validation are O(intervals), not O(cycles)).
+
+Per-cycle :class:`Segment` views are materialized lazily for small layouts
+(rendering, oracle cross-checks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .task import LayoutProblem
+
+# A per-cycle slot structure: ((array_index, elems_per_cycle), ...) lane order.
+Counts = tuple[tuple[int, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """``n_elems`` consecutive elements of one array in one bus cycle."""
+
+    array: int       # index into problem.arrays
+    elem_start: int  # index of the first element transferred
+    n_elems: int
+    bit_offset: int  # offset of the first element's LSB within the bus word
+
+    def bits(self, problem: LayoutProblem) -> int:
+        return self.n_elems * problem.arrays[self.array].width
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """A run of ``n_cycles`` cycles sharing one per-cycle segment structure.
+
+    ``slots`` holds (array, bit_offset, elems_per_cycle); element indices for
+    cycle ``c`` within the interval are ``elem_base[i] + c * elems_per_cycle``.
+    """
+
+    start_cycle: int
+    n_cycles: int
+    slots: tuple[tuple[int, int, int], ...]   # (array, bit_offset, n_elems)
+    elem_base: tuple[int, ...]                # first element idx per slot
+
+
+@dataclasses.dataclass
+class LayoutMetrics:
+    """Paper metrics: Eq. 1 efficiency, lateness, FIFO depths."""
+
+    c_max: int
+    efficiency: float                  # B_eff = p_tot / (C_max * m)
+    lateness: dict[str, int]           # L_j per array
+    l_max: int
+    completion: dict[str, int]         # C_j per array (1-based cycle count)
+    fifo_depth: dict[str, int]         # decode-module buffering per array
+    wasted_bits: int                   # C_max*m - p_tot
+
+    def row(self) -> dict[str, object]:
+        return {
+            "C_max": self.c_max,
+            "B_eff": round(self.efficiency, 4),
+            "L_max": self.l_max,
+            "FIFO": dict(self.fifo_depth),
+            "wasted_bits": self.wasted_bits,
+        }
+
+
+_MATERIALIZE_LIMIT = 1 << 18  # refuse to expand >256k cycles unless forced
+
+
+class Layout:
+    """A complete bus layout in due-date space, interval-native."""
+
+    def __init__(self, problem: LayoutProblem,
+                 count_intervals: Sequence[tuple[int, Counts]]) -> None:
+        """``count_intervals`` are (n_cycles, counts) runs in final cycle order.
+
+        Element indices are assigned sequentially per array in cycle order;
+        bit offsets are packed LSB-first in slot order.
+        """
+        self.problem = problem
+        self.count_intervals: list[tuple[int, Counts]] = [
+            (int(n), tuple((int(a), int(e)) for a, e in counts if e > 0))
+            for n, counts in count_intervals
+            if n > 0
+        ]
+        self._intervals: list[Interval] | None = None
+        self._cycles: list[list[Segment]] | None = None
+        self._build_intervals()
+
+    # ------------------------------------------------------------------
+    # construction helpers
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_counts(problem: LayoutProblem,
+                    count_cycles: Sequence[Counts],
+                    reverse: bool = False) -> "Layout":
+        """Build from per-cycle (array, n_elems) counts, merging runs.
+
+        ``reverse=True`` flips the cycle order first (release-time space ->
+        due-date space).
+        """
+        seq = list(reversed(count_cycles)) if reverse else list(count_cycles)
+        runs: list[tuple[int, Counts]] = []
+        for counts in seq:
+            counts = tuple((a, e) for a, e in counts if e > 0)
+            if runs and runs[-1][1] == counts:
+                runs[-1] = (runs[-1][0] + 1, counts)
+            else:
+                runs.append((1, counts))
+        return Layout(problem, runs)
+
+    @staticmethod
+    def from_count_intervals(problem: LayoutProblem,
+                             intervals: Sequence[tuple[int, Counts]],
+                             reverse: bool = False) -> "Layout":
+        seq = list(reversed(intervals)) if reverse else list(intervals)
+        return Layout(problem, seq)
+
+    def _build_intervals(self) -> None:
+        prob = self.problem
+        next_elem = [0] * len(prob.arrays)
+        out: list[Interval] = []
+        t = 0
+        for n_cycles, counts in self.count_intervals:
+            offset = 0
+            slots: list[tuple[int, int, int]] = []
+            base: list[int] = []
+            for array, n in counts:
+                spec = prob.arrays[array]
+                slots.append((array, offset, n))
+                base.append(next_elem[array])
+                next_elem[array] += n * n_cycles
+                offset += n * spec.width
+            if offset > prob.m:
+                raise ValueError(
+                    f"interval at cycle {t} overflows the bus: "
+                    f"{offset} > {prob.m} bits"
+                )
+            out.append(Interval(t, n_cycles, tuple(slots), tuple(base)))
+            t += n_cycles
+        for i, spec in enumerate(prob.arrays):
+            if next_elem[i] != spec.depth:
+                raise ValueError(
+                    f"array {spec.name}: scheduled {next_elem[i]} of "
+                    f"{spec.depth} elements"
+                )
+        self._intervals = out
+
+    # ------------------------------------------------------------------
+    # validation (O(intervals * slots))
+    # ------------------------------------------------------------------
+    def validate(self) -> None:
+        """Check the layout is a legal, complete transfer plan."""
+        prob = self.problem
+        ranges: list[list[tuple[int, int]]] = [[] for _ in prob.arrays]
+        for iv in self.intervals():
+            used = 0
+            bit_ranges: list[tuple[int, int]] = []
+            for (array, off, n), base in zip(iv.slots, iv.elem_base):
+                spec = prob.arrays[array]
+                if n <= 0:
+                    raise AssertionError("empty slot in interval")
+                hi = off + n * spec.width
+                if hi > prob.m:
+                    raise AssertionError(
+                        f"cycle {iv.start_cycle}: slot exceeds bus width"
+                    )
+                bit_ranges.append((off, hi))
+                used += n * spec.width
+                # slot covers elements [base, base + n * n_cycles)
+                ranges[array].append((base, base + n * iv.n_cycles))
+            if used > prob.m:
+                raise AssertionError(
+                    f"cycle {iv.start_cycle}: {used} bits > bus {prob.m}"
+                )
+            bit_ranges.sort()
+            for (a0, a1), (b0, b1) in zip(bit_ranges, bit_ranges[1:]):
+                if b0 < a1:
+                    raise AssertionError(
+                        f"cycle {iv.start_cycle}: overlapping bit ranges"
+                    )
+        for i, spec in enumerate(prob.arrays):
+            rs = sorted(ranges[i])
+            pos = 0
+            for lo, hi in rs:
+                if lo != pos:
+                    raise AssertionError(
+                        f"array {spec.name}: elements "
+                        f"[{min(lo, pos)},{max(lo, pos)}) duplicated or missing"
+                    )
+                pos = hi
+            if pos != spec.depth:
+                raise AssertionError(
+                    f"array {spec.name}: {spec.depth - pos} elements "
+                    "never transferred"
+                )
+
+    # ------------------------------------------------------------------
+    # derived views
+    # ------------------------------------------------------------------
+    @property
+    def c_max(self) -> int:
+        return sum(n for n, _ in self.count_intervals)
+
+    def intervals(self) -> list[Interval]:
+        assert self._intervals is not None
+        return self._intervals
+
+    @property
+    def cycles(self) -> list[list[Segment]]:
+        """Per-cycle segment lists (materialized; small layouts only)."""
+        if self._cycles is None:
+            if self.c_max > _MATERIALIZE_LIMIT:
+                raise RuntimeError(
+                    f"refusing to materialize {self.c_max} cycles; "
+                    "use intervals() instead"
+                )
+            out: list[list[Segment]] = []
+            for iv in self.intervals():
+                for c in range(iv.n_cycles):
+                    segs = [
+                        Segment(array, base + c * n, n, off)
+                        for (array, off, n), base in zip(iv.slots, iv.elem_base)
+                    ]
+                    out.append(segs)
+            self._cycles = out
+        return self._cycles
+
+    def element_positions(self, array: int) -> list[tuple[int, int]]:
+        """(cycle, bit_offset) per element, in element order."""
+        spec = self.problem.arrays[array]
+        pos: list[tuple[int, int] | None] = [None] * spec.depth
+        for iv in self.intervals():
+            for (arr, off, n), base in zip(iv.slots, iv.elem_base):
+                if arr != array:
+                    continue
+                for c in range(iv.n_cycles):
+                    for k in range(n):
+                        pos[base + c * n + k] = (
+                            iv.start_cycle + c,
+                            off + k * spec.width,
+                        )
+        assert all(p is not None for p in pos)
+        return pos  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # metrics (paper §4, §6) — interval-native, O(intervals)
+    # ------------------------------------------------------------------
+    def metrics(self) -> LayoutMetrics:
+        prob = self.problem
+        last = [0] * len(prob.arrays)
+        for iv in self.intervals():
+            for (array, _off, _n) in iv.slots:
+                last[array] = max(last[array], iv.start_cycle + iv.n_cycles)
+        completion = {a.name: last[i] for i, a in enumerate(prob.arrays)}
+        lateness = {a.name: last[i] - a.due for i, a in enumerate(prob.arrays)}
+        fifo = {a.name: d for a, d in zip(prob.arrays, self.fifo_depths())}
+        c_max = self.c_max
+        return LayoutMetrics(
+            c_max=c_max,
+            efficiency=prob.p_tot / (c_max * prob.m),
+            lateness=lateness,
+            l_max=max(lateness.values()),
+            completion=completion,
+            fifo_depth=fifo,
+            wasted_bits=c_max * prob.m - prob.p_tot,
+        )
+
+    def fifo_depths(self) -> list[int]:
+        """Decode-side buffering per array (paper §5 running sum).
+
+        The read module forwards one element per array per cycle to its
+        stream; the surplus ``e_c - 1`` elements in a cycle must be staged.
+        Depth = max backlog over the schedule, computed analytically per
+        interval (arrival rate is constant within an interval).
+        Reproduces the paper's reported depths exactly (Helmholtz naive
+        u -> 998, MM (64,64) naive -> 468 / Iris -> 312).
+        """
+        n = len(self.problem.arrays)
+        backlog = [0] * n
+        depth = [0] * n
+        for iv in self.intervals():
+            arrived = [0] * n
+            for (array, _off, cnt) in iv.slots:
+                arrived[array] += cnt
+            for i in range(n):
+                e = arrived[i]
+                tau = iv.n_cycles
+                if e == 0:
+                    backlog[i] = max(0, backlog[i] - tau)
+                elif e == 1:
+                    pass  # steady state: one in, one out
+                else:
+                    backlog[i] += (e - 1) * tau
+                    depth[i] = max(depth[i], backlog[i])
+        return depth
+
+    def max_concurrent_elems(self) -> list[int]:
+        """Max elements of each array in any single cycle (write-port count)."""
+        n = len(self.problem.arrays)
+        peak = [0] * n
+        for iv in self.intervals():
+            arrived = [0] * n
+            for (array, _off, cnt) in iv.slots:
+                arrived[array] += cnt
+            for i in range(n):
+                peak[i] = max(peak[i], arrived[i])
+        return peak
+
+    # ------------------------------------------------------------------
+    def render(self, max_cycles: int = 64) -> str:
+        """ASCII rendering in the style of the paper's Figs. 3-5."""
+        prob = self.problem
+        lines = []
+        shown = 0
+        for iv in self.intervals():
+            for c in range(iv.n_cycles):
+                if shown >= max_cycles:
+                    lines.append(f"  ... ({self.c_max - shown} more cycles)")
+                    return "\n".join(lines)
+                row = ["."] * prob.m
+                for (array, off, n), _base in zip(iv.slots, iv.elem_base):
+                    spec = prob.arrays[array]
+                    for k in range(n):
+                        lo = off + k * spec.width
+                        for b in range(spec.width):
+                            row[lo + b] = spec.name[0]
+                lines.append(f"{iv.start_cycle + c:4d} |{''.join(row)}|")
+                shown += 1
+        return "\n".join(lines)

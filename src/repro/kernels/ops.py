@@ -1,0 +1,72 @@
+"""Public jit'd entry points for the kernels package.
+
+``decode_layout`` runs the full accelerator-side read module: it walks the
+static :class:`~repro.core.codegen.DecodePlan` and emits one Pallas decode
+unit per (interval, slot), stitching results into per-array code streams —
+the whole program is static and jits into a single XLA computation (the
+TPU analogue of the paper's single HLS read_data module).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codegen import DecodePlan, decode_plan
+from repro.core.layout import Layout
+
+from .layout_decode import decode_slot
+from .packed_matmul import packed_matmul  # noqa: F401  (re-export)
+
+
+def buffer_to_u32(buf_u8: np.ndarray | jax.Array) -> jax.Array:
+    """(c_max, m/8) uint8 rows -> (c_max, m/32 + 2) uint32 words.
+
+    Two trailing spare words per row so a funnel shift at the last element
+    never reads out of bounds (mirrors the packer's spare bytes).
+    """
+    buf = jnp.asarray(buf_u8, dtype=jnp.uint8)
+    c, row_bytes = buf.shape
+    # pad each row to a u32 boundary plus two spare words
+    pad = (-row_bytes) % 4 + 8
+    buf = jnp.pad(buf, ((0, 0), (0, pad)))
+    words = buf.reshape(c, (row_bytes + pad) // 4, 4).astype(jnp.uint32)
+    shifts = jnp.array([0, 8, 16, 24], dtype=jnp.uint32)
+    return jnp.sum(words << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def decode_layout(layout: Layout, buf_u8: np.ndarray | jax.Array, *,
+                  interpret: bool = True,
+                  plan: DecodePlan | None = None) -> dict[str, jax.Array]:
+    """Decode an Iris-packed buffer into per-array uint32 code streams."""
+    plan = plan if plan is not None else decode_plan(layout)
+    words = buffer_to_u32(buf_u8)
+    outs = {
+        a.name: jnp.zeros(a.depth, dtype=jnp.uint32)
+        for a in layout.problem.arrays
+    }
+    for slot in plan.slots:
+        if slot.width > 32:
+            raise NotImplementedError(
+                f"{slot.name}: widths > 32 use the numpy host path"
+            )
+        rows = jax.lax.slice(
+            words, (slot.start_cycle, 0),
+            (slot.start_cycle + slot.n_cycles, words.shape[1]),
+        )
+        offsets = tuple(
+            slot.bit_offset + k * slot.width for k in range(slot.lanes)
+        )
+        codes = decode_slot(
+            rows,
+            offsets=offsets,
+            width=slot.width,
+            n_rows=slot.n_cycles,
+            interpret=interpret,
+        )
+        outs[slot.name] = jax.lax.dynamic_update_slice(
+            outs[slot.name], codes, (slot.elem_base,)
+        )
+    return outs

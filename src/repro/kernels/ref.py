@@ -1,0 +1,48 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codegen import unpack_arrays
+from repro.core.layout import Layout
+
+
+def decode_layout_ref(layout: Layout, buf_u8: np.ndarray) -> dict[str, np.ndarray]:
+    """Oracle for ``ops.decode_layout``: the numpy bit-gatherer."""
+    return unpack_arrays(layout, np.asarray(buf_u8))
+
+
+def decode_slot_ref(rows_u32: np.ndarray, offsets: tuple[int, ...],
+                    width: int, n_rows: int) -> np.ndarray:
+    """Oracle for ``layout_decode.decode_slot`` (vectorized numpy)."""
+    rows = np.asarray(rows_u32[:n_rows], dtype=np.uint64)
+    mask = np.uint64((1 << width) - 1)
+    cols = []
+    for off in offsets:
+        w0, sh = off // 32, off % 32
+        v = rows[:, w0] >> np.uint64(sh)
+        if sh and sh + width > 32:
+            v = v | (rows[:, w0 + 1] << np.uint64(32 - sh))
+        cols.append(v & mask)
+    return np.stack(cols, axis=1).reshape(-1).astype(np.uint32)
+
+
+def packed_matmul_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
+                      *, bits: int, group_size: int) -> jax.Array:
+    """Oracle for ``packed_matmul``: unpack everything, then one big dot."""
+    lanes = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    bias = float(1 << (bits - 1))
+    kw, n = w_packed.shape
+    k = kw * lanes
+    planes = [
+        ((w_packed >> jnp.uint32(l * bits)) & mask) for l in range(lanes)
+    ]
+    codes = jnp.stack(planes, axis=1).reshape(k, n)
+    wq = codes.astype(jnp.float32) - bias
+    wf = (wq.reshape(k // group_size, group_size, n)
+          * scales.astype(jnp.float32)[:, None, :]).reshape(k, n)
+    return jnp.dot(x.astype(jnp.float32), wf,
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first initialization).  Everything below is normal code.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we jit the step function with production shardings,
+``.lower().compile()`` it against ShapeDtypeStruct inputs (no allocation),
+and record:
+
+* ``memory_analysis()``  — bytes per device (proves the cell fits),
+* ``cost_analysis()``    — FLOPs / bytes for the roofline terms,
+* collective bytes       — parsed from the optimized HLO,
+* the derived roofline terms + MODEL_FLOPS ratio (launch/roofline.py).
+
+Artifacts are written as JSON under --out (default artifacts/dryrun) and
+aggregated into EXPERIMENTS.md by benchmarks/roofline_report.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --arch jamba-1.5-large-398b --shape long_500k --mesh multi
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path, remat: str = "full",
+             fsdp: bool | None = None, donate: bool = True,
+             opt_dtype: str = "float32",
+             kv_dtype: str = "bfloat16", tag: str = "",
+             kv_replicate: bool = True) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import (
+        batch_sharding,
+        decode_state_shardings,
+        opt_state_shardings,
+        param_shardings,
+    )
+    from repro.launch.specs import (
+        abstract_params,
+        abstract_train_state,
+        input_specs,
+    )
+    from repro.launch.steps import (
+        build_prefill_step,
+        build_serve_step,
+        build_train_step,
+    )
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    tp = mesh.shape["model"]
+    cfg = get_config(arch)
+    if kv_replicate:
+        # GQA TP practice: replicate KV heads to a multiple of the model
+        # axis.  kv_replicate=False keeps the true head count and lets the
+        # sharding rules fall back to head_dim sharding (halves KV bytes
+        # for kv8/tp16 archs at the cost of a psum over hd in decode).
+        cfg = cfg.with_tp(tp)
+    if kv_dtype != "bfloat16":
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, kv_cache_dtype=kv_dtype)
+    # FSDP for >= 8B params (everything smaller fits replicated-over-data)
+    if fsdp is None:
+        fsdp = cfg.param_count() > 8e9
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            state_shape = abstract_train_state(cfg, opt_dtype)
+            p_shard = param_shardings(state_shape["params"], mesh, fsdp=fsdp)
+            o_shard = opt_state_shardings(state_shape["opt"], p_shard, mesh)
+            in_state_shard = {"params": p_shard, "opt": o_shard}
+            batch = input_specs(cfg, shape)["batch"]
+            b_shard = batch_sharding(batch, mesh)
+            fn = build_train_step(cfg, remat=remat)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(in_state_shard, b_shard),
+                donate_argnums=(0,) if donate else (),
+            )
+            lowered = jitted.lower(state_shape, batch)
+        elif shape.kind == "prefill":
+            params = abstract_params(cfg)
+            p_shard = param_shardings(params, mesh, fsdp=fsdp)
+            batch = input_specs(cfg, shape)["batch"]
+            b_shard = batch_sharding(batch, mesh)
+            fn = build_prefill_step(cfg, remat="none")
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            params = abstract_params(cfg)
+            p_shard = param_shardings(params, mesh, fsdp=fsdp)
+            spec = input_specs(cfg, shape)
+            shard_seq = shape.global_batch == 1
+            s_shard = decode_state_shardings(spec["state"], mesh,
+                                             shard_seq=shard_seq)
+            t_shard = batch_sharding(spec["tokens"], mesh)
+            fn = build_serve_step(cfg)
+            if "cross_kv" in spec:
+                c_shard = decode_state_shardings(
+                    {"cross_kv": spec["cross_kv"]}, mesh,
+                    shard_seq=shard_seq)["cross_kv"]
+                jitted = jax.jit(
+                    fn, in_shardings=(p_shard, s_shard, t_shard, c_shard),
+                    donate_argnums=(1,) if donate else ())
+                lowered = jitted.lower(params, spec["state"], spec["tokens"],
+                                       spec["cross_kv"])
+            else:
+                jitted = jax.jit(
+                    fn, in_shardings=(p_shard, s_shard, t_shard),
+                    donate_argnums=(1,) if donate else ())
+                lowered = jitted.lower(params, spec["state"], spec["tokens"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    from repro.launch import hlo_cost
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # loop-aware costs: XLA's cost_analysis counts while bodies once,
+    # which voids roofline math for scan-over-layers models (see
+    # launch/hlo_cost.py); the analyzer propagates known_trip_counts.
+    hc = hlo_cost.analyze(hlo)
+    coll = rl.CollectiveStats(
+        {k: int(v) for k, v in hc.collective_bytes_by_kind.items()},
+        hc.collective_count_by_kind)
+    n_chips = mesh.devices.size
+    mf = rl.model_flops(cfg, shape)
+    # memory: XLA's per-op 'bytes accessed' estimate, rescaled by the
+    # analyzer's loop/unit byte ratio (fixes the loop-blindness without
+    # inheriting the analyzer's per-op read double-counting)
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    mem_bytes = raw_bytes * hc.loop_scale_bytes
+    terms = rl.roofline_terms(
+        {"flops": hc.flops, "bytes accessed": mem_bytes},
+        coll, n_chips, mf)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "fsdp": fsdp,
+        "remat": remat,
+        "opt_dtype": opt_dtype,
+        "kv_dtype": kv_dtype,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "cost_raw_xla": {k: cost.get(k) for k in ("flops",
+                                                  "bytes accessed")},
+        "cost": {"flops": hc.flops, "bytes accessed": hc.hbm_bytes,
+                 "n_while_loops": hc.n_while_loops,
+                 "max_trip_count": hc.max_trip_count},
+        "collectives": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+        },
+        "roofline": terms.as_dict(),
+        "status": "ok",
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}__{result['mesh']}"
+    if tag:
+        name += f"__{tag}"
+        result["tag"] = tag
+    (out_dir / f"{name}.json").write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--opt-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--kv-dtype", default="bfloat16",
+                    choices=["bfloat16", "float8_e5m2"])
+    ap.add_argument("--tag", default="",
+                    help="suffix for the artifact filename (perf iters)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    from repro.configs import ARCH_IDS, shape_cells
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for sc in shape_cells(arch):
+                cells.append((arch, sc.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch} x {shape} x {'multi' if multi else 'single'}"
+            try:
+                r = run_cell(arch, shape, multi, out, remat=args.remat,
+                             fsdp=False if args.no_fsdp else None,
+                             opt_dtype=args.opt_dtype,
+                             kv_dtype=args.kv_dtype, tag=args.tag)
+                rt = r["roofline"]
+                print(f"OK   {tag}: compile={r['compile_s']}s "
+                      f"peak={r['memory']['peak_bytes']/2**30:.2f}GiB/dev "
+                      f"bottleneck={rt['bottleneck']} "
+                      f"(c={rt['compute_s']:.2e}s m={rt['memory_s']:.2e}s "
+                      f"coll={rt['collective_s']:.2e}s)", flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                out.mkdir(parents=True, exist_ok=True)
+                mesh_tag = "pod2x16x16" if multi else "pod16x16"
+                (out / f"{arch}__{shape}__{mesh_tag}.json").write_text(
+                    json.dumps({"arch": arch, "shape": shape,
+                                "mesh": mesh_tag, "status": "error",
+                                "error": str(e)[:2000]}, indent=2))
+                print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:300]}",
+                      flush=True)
+                traceback.print_exc()
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

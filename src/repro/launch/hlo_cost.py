@@ -1,0 +1,248 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE (verified:
+a length-8 scanned matmul reports 1/8th the flops of its unrolled twin),
+which silently voids roofline math for scan-over-layers models.  This
+module re-derives the three roofline inputs from the HLO text with loop
+multipliers propagated through the call graph:
+
+* **flops**      — 2*M*N*K per ``dot`` (dominant; elementwise ignored),
+* **collective bytes** — result bytes per collective op,
+* **hbm bytes**  — per materializing op: result bytes + operand-read
+  bytes (fusion interiors are skipped — fused values never hit HBM;
+  the fusion node itself accounts for its operands/results).
+
+Multiplier rules: entry = 1; ``while`` body/condition inherit
+parent x known_trip_count; ``fusion``/``call``/``to_apply`` inherit parent.
+
+This is an estimator, not a simulator: constants/layout-change copies are
+counted at face value and operand reads are counted once per use.  Its
+job is to make the three terms *comparable and loop-correct*, which is
+what the §Perf iteration needs.  Validated against unrolled references in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_VALUE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"^\(?\s*([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_ALL_SHAPES_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPNAME_RE = re.compile(r"\)?\s*([a-z][a-z0-9\-]*)\(")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_bytes: int
+    tuple_bytes: int
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+    shapes: dict[str, int]      # value name -> result bytes
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_bytes_by_kind: dict[str, float]
+    collective_count_by_kind: dict[str, int]
+    n_while_loops: int
+    max_trip_count: int
+    #: same accumulations with every loop multiplier forced to 1 — the
+    #: ratio loop/unit rescales XLA's own (loop-blind) cost_analysis
+    #: numbers without inheriting this estimator's per-op biases.
+    flops_unit: float = 0.0
+    hbm_bytes_unit: float = 0.0
+
+    @property
+    def loop_scale_bytes(self) -> float:
+        return (self.hbm_bytes / self.hbm_bytes_unit
+                if self.hbm_bytes_unit else 1.0)
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        m = _COMP_RE.match(line) if not line.startswith(" ") else None
+        if m and stripped.endswith("{"):
+            cur = _Computation(m.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        vm = _VALUE_RE.match(line)
+        if not vm:
+            continue
+        name, rhs = vm.groups()
+        sm = _SHAPE_RE.match(rhs)
+        result_bytes = _shape_bytes(*sm.groups()) if sm else 0
+        tuple_bytes = sum(
+            _shape_bytes(d, s)
+            for d, s in _ALL_SHAPES_RE.findall(rhs.split("(")[0]))
+        om = _OPNAME_RE.search(rhs)
+        kind = om.group(1) if om else "unknown"
+        paren = rhs[rhs.find("("):]
+        operands = _OPERANDS_RE.findall(paren.split(")")[0]) if paren else []
+        cur.shapes[name] = tuple_bytes or result_bytes
+        cur.ops.append(_Op(name, kind, result_bytes, tuple_bytes,
+                           operands, rhs))
+    return comps
+
+
+def analyze(text: str, entry: str | None = None) -> HloCost:
+    comps = _parse_computations(text)
+    if not comps:
+        return HloCost(0, 0, 0, {}, {}, 0, 0)
+    # find the entry computation
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        entry_name = m.group(1) if m else next(iter(comps))
+
+    # propagate multipliers through the call graph
+    mult: dict[str, float] = {entry_name: 1.0}
+    fused_body: set[str] = set()
+    stack = [entry_name]
+    n_while = 0
+    max_trip = 0
+    seen = set()
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        parent_m = mult.get(cname, 1.0)
+        for op in comps[cname].ops:
+            if op.kind == "while":
+                tm = _TRIP_RE.search(op.line)
+                trip = int(tm.group(1)) if tm else 1
+                n_while += 1
+                max_trip = max(max_trip, trip)
+                wm = _WHILE_RE.search(op.line)
+                if wm:
+                    cond, body = wm.groups()
+                    for sub, f in ((body, trip), (cond, trip)):
+                        mult[sub] = max(mult.get(sub, 0.0), parent_m * f)
+                        stack.append(sub)
+            else:
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    sub = cm.group(1)
+                    mult[sub] = max(mult.get(sub, 0.0), parent_m)
+                    stack.append(sub)
+                    if op.kind == "fusion":
+                        fused_body.add(sub)
+
+    flops = 0.0
+    flops_unit = 0.0
+    hbm = 0.0
+    hbm_unit = 0.0
+    coll_b: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_n: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        in_fusion = cname in fused_body
+        for op in comp.ops:
+            if op.kind == "dot":
+                df = _dot_flops(op, comp)
+                flops += m * df
+                flops_unit += df
+            base = op.kind.split("-start")[0]
+            if base in _COLLECTIVES and not op.kind.endswith("-done"):
+                b = op.result_bytes if op.kind.endswith("-start") \
+                    else (op.tuple_bytes or op.result_bytes)
+                coll_b[base] += m * b
+                coll_n[base] += int(m) if m >= 1 else 1
+            if in_fusion:
+                continue            # fused interiors never touch HBM
+            if op.kind in ("parameter", "constant", "get-tuple-element",
+                           "tuple", "bitcast", "while", "conditional"):
+                continue
+            reads = sum(comp.shapes.get(o, 0) for o in op.operands)
+            b = (op.tuple_bytes or op.result_bytes + 0.0) + reads
+            hbm += m * b
+            hbm_unit += b
+
+    return HloCost(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=sum(coll_b.values()),
+        collective_bytes_by_kind=coll_b,
+        collective_count_by_kind=coll_n,
+        n_while_loops=n_while,
+        max_trip_count=max_trip,
+        flops_unit=flops_unit,
+        hbm_bytes_unit=hbm_unit,
+    )
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    """2 * prod(result dims) * prod(contracted dims) from the HLO line."""
+    sm = _SHAPE_RE.match(op.line)
+    if not sm:
+        return 0.0
+    dtype, dims = sm.groups()
+    out_elems = 1
+    if dims:
+        for d in dims.split(","):
+            out_elems *= int(d)
+    # contracted size: lhs shape at lhs_contracting_dims
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if not cm or not op.operands:
+        return 2.0 * out_elems          # fallback: treat as elementwise-ish
+    lhs = op.operands[0]
+    # find the lhs declaration to get its dims
+    lhs_line = next((o.line for o in comp.ops if o.name == lhs), None)
+    if lhs_line is None:
+        return 2.0 * out_elems
+    lm = _SHAPE_RE.match(lhs_line)
+    if lm is None:
+        return 2.0 * out_elems
+    lhs_dims = [int(x) for x in lm.group(2).split(",")] if lm.group(2) else []
+    k = 1
+    for idx in cm.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k

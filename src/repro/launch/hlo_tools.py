@@ -1,0 +1,64 @@
+"""HLO inspection helpers for the dry-run perf loop (no real hardware).
+
+The 'profile' on this container is the optimized HLO text: these helpers
+surface the largest tensors, op-category FLOP/byte histograms, and
+collective inventories that drive the §Perf hypothesis loop.
+"""
+from __future__ import annotations
+
+import collections
+import re
+
+_SHAPE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]+)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8,
+}
+
+
+def tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def largest_tensors(hlo_text: str, top: int = 25) -> list[tuple[int, str]]:
+    """(bytes, hlo_line_prefix) for the largest result tensors."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        m = _SHAPE.search(rhs.strip()[:120])
+        if not m:
+            continue
+        b = tensor_bytes(m.group(1), m.group(2))
+        out.append((b, line[:160]))
+    out.sort(key=lambda x: -x[0])
+    return out[:top]
+
+
+def op_histogram(hlo_text: str) -> dict[str, int]:
+    """Count of ops by kind in the optimized module."""
+    hist: collections.Counter = collections.Counter()
+    op_re = re.compile(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                       r"([a-z][a-z0-9-]*)\(")
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(hist.most_common())
+
+
+def collective_inventory(hlo_text: str) -> list[str]:
+    """Every collective op line (for eyeballing redundant collectives)."""
+    keys = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute")
+    return [
+        line.strip()[:200] for line in hlo_text.splitlines()
+        if any(k in line for k in keys) and "=" in line
+        and "-done" not in line
+    ]

@@ -1,0 +1,51 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16); the 'pod'
+axis carries pure data parallelism (gradient all-reduce crosses the
+inter-pod DCN/optical links only once per step).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run pins XLA_FLAGS *before* any jax initialization).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run entry "
+            "point must set xla_force_host_platform_device_count first")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_debug_mesh(shape: tuple[int, ...] = (2, 2),
+                    axes: tuple[str, ...] = ("data", "model")
+                    ) -> jax.sharding.Mesh:
+    """Small mesh for CPU tests (requires enough host devices)."""
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The pure data-parallel axes of a mesh ('pod' folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def mesh_axis_size(mesh: jax.sharding.Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), all in seconds (EXPERIMENTS.md
+§Roofline):
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / (links * link_bw)
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed, reported
+for one SPMD partition = one chip) and a text pass over the optimized HLO
+summing operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (result-shape bytes of each ``-start`` or
+sync op — the DMA the ICI actually carries).
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI with 2 usable links per torus axis (conservative: we
+divide collective bytes by 1 link's bandwidth and report the link count
+separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = bf16[128,1024]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+# tuple-result collectives:  %x = (bf16[..], bf16[..]) all-to-all(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result bytes of every collective op in (optimized) HLO text.
+
+    ``-done`` ops are skipped (their ``-start`` was already counted);
+    ``-start`` result tuples double-count operand aliases, so for starts we
+    take the largest tuple element only.
+    """
+    by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind, _start = m.groups()
+            by_kind[kind] += _shape_bytes(dtype, dims)
+            count[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            tup, kind, start = m.group(1), m.group(2), m.group(3)
+            sizes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tup)]
+            if not sizes:
+                continue
+            by_kind[kind] += max(sizes) if start else sum(sizes)
+            count[kind] += 1
+    return CollectiveStats(by_kind, count)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float
+    useful_flops_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, n_chips: int,
+                   model_flops_total: float) -> RooflineTerms:
+    """cost: compiled.cost_analysis() of one SPMD partition."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.total_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    hlo_total = flops * n_chips
+    return RooflineTerms(
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        collective_bytes_per_chip=cbytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_total=model_flops_total,
+        useful_flops_ratio=(model_flops_total / hlo_total
+                            if hlo_total else 0.0),
+    )
+
+
+# ----------------------------------------------------------------------
+# MODEL_FLOPS: 6*N*D (train) / 2*N*D (inference) + attention terms
+# ----------------------------------------------------------------------
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs for one step of this cell (active params for MoE)."""
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.layer_is_attn(i))
+    hd, h = cfg.head_dim, cfg.n_heads
+    if shape.kind == "train":
+        tokens = b * s
+        mm = 6.0 * n_active * tokens
+        attn = n_attn * 3 * 2 * 2 * b * s * s * h * hd * 0.5  # causal, fwd+bwd
+    elif shape.kind == "prefill":
+        tokens = b * s
+        mm = 2.0 * n_active * tokens
+        attn = n_attn * 2 * 2 * b * s * s * h * hd * 0.5
+    else:  # decode: one token against an s-long context
+        tokens = b
+        mm = 2.0 * n_active * tokens
+        attn = n_attn * 2 * 2 * b * s * h * hd
+    if cfg.family == "ssm" or cfg.ssm is not None:
+        # linear-attention state updates: ~6 flops per (head, dk, dv) elem
+        n_lin = cfg.n_layers - n_attn
+        if cfg.rwkv is not None:
+            dk = dv = cfg.rwkv.head_dim
+            heads = cfg.d_model // dk
+        else:
+            dk = cfg.ssm.d_state
+            dv = cfg.ssm.head_dim
+            heads = cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim
+        per_tok = 6.0 * heads * dk * dv
+        mult = 3.0 if shape.kind == "train" else 1.0
+        n_tok = b if shape.kind == "decode" else b * s
+        attn += n_lin * per_tok * n_tok * mult
+    return mm + attn

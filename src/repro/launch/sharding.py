@@ -1,0 +1,187 @@
+"""Sharding rules: param pytrees and runtime state -> PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+
+* TP over 'model' on the "wide" dimension of every weight matrix
+  (ffn hidden, attention heads, vocab, experts);
+* FSDP over 'data' on the other dimension for large configs (XLA
+  all-gathers per scanned layer);
+* DP over ('pod', 'data') for activations/batch;
+* EP: expert dimension of MoE weights over 'model';
+* every rule is divisibility-checked per tensor dimension — axes that do
+  not divide are dropped (replicated) rather than failing, which is what
+  lets one rule set serve 10 heterogeneous architectures.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes, mesh_axis_size
+
+# weights whose FIRST data dim is the contraction/output-projection side
+_OUT_PROJ = ("wo", "w_o", "w_down", "w_out", "w_v_channel", "decay_b")
+# small / replicated leaves
+_REPLICATED = ("norm", "scale", "bias", "mix", "bonus_u", "a_log", "d_skip",
+               "dt_bias", "decay_w0", "router", "step")
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % mesh_axis_size(mesh, axes) == 0
+
+
+def _maybe(axis, dim, mesh):
+    """axis if it divides dim else None."""
+    if axis is None:
+        return None
+    return axis if _fits(dim, mesh, axis) else None
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in path).lower()
+
+
+def leaf_partition_spec(path, leaf, mesh: Mesh, *, fsdp: bool = True) -> P:
+    """PartitionSpec for one param leaf, by name + shape."""
+    name = _path_str(path)
+    shape = tuple(leaf.shape)
+    stacked = "blocks" in name or "encoder" in name
+    fsdp_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+
+    def build(dims: tuple) -> P:
+        """dims: per-dim axis proposals for the *unstacked* trailing dims."""
+        specs = [None] * (len(shape) - len(dims)) + [
+            _maybe(a, d, mesh) for a, d in zip(dims, shape[-len(dims):])
+        ]
+        return P(*specs)
+
+    base = name.rsplit("/", 1)[-1]
+    if any(s in base for s in _REPLICATED) or leaf.ndim <= 1 + int(stacked):
+        return P()
+    is_moe = "/moe/" in name or name.endswith("moe")
+    core = shape[1:] if stacked else shape
+    if is_moe and len(core) == 3:                 # (E, d_in, d_out)
+        if any(base.endswith(o) for o in _OUT_PROJ):
+            return build(("model", None, fsdp_ax))
+        return build(("model", fsdp_ax, None))
+    if base == "embed":                           # (V, d) vocab-parallel
+        return build(("model", fsdp_ax))
+    if base == "unembed":                         # (d, V)
+        return build((fsdp_ax, "model"))
+    if len(core) == 2:
+        if any(base.endswith(o) for o in _OUT_PROJ):
+            return build(("model", fsdp_ax))      # contraction on 'model'
+        return build((fsdp_ax, "model"))
+    return P()
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, *, fsdp: bool = True
+                    ) -> Any:
+    """Map a pytree of ShapeDtypeStructs/arrays to NamedShardings."""
+    def f(path, leaf):
+        return NamedSharding(mesh, leaf_partition_spec(
+            path, leaf, mesh, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def opt_state_shardings(opt_shape: Any, param_sharding_tree: Any,
+                        mesh: Mesh) -> Any:
+    """Moments m/v shard exactly like their params; step is replicated."""
+    del param_sharding_tree
+
+    def f(path, leaf):
+        top = getattr(path[0], "key", None)
+        if top == "step":
+            return NamedSharding(mesh, P())
+        # reuse the param rule on the path below m/v
+        return NamedSharding(mesh, leaf_partition_spec(
+            path[1:], leaf, mesh))
+    return jax.tree_util.tree_map_with_path(f, opt_shape)
+
+
+# ----------------------------------------------------------------------
+# runtime state (batches, KV caches, decode state)
+# ----------------------------------------------------------------------
+def batch_sharding(shape_tree: Any, mesh: Mesh) -> Any:
+    """Token batches: leading (global) batch dim over DP axes."""
+    dp = dp_axes(mesh)
+
+    def f(_path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        if _fits(leaf.shape[0], mesh, dp):
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, shape_tree)
+
+
+def decode_state_shardings(state_shape: Any, mesh: Mesh, *,
+                           shard_seq: bool = False) -> Any:
+    """KV caches: batch over DP (or sequence for long-context, B=1),
+    heads over 'model' (falling back to head_dim, then replication)."""
+    dp = dp_axes(mesh)
+
+    def kv_spec(shape):
+        # (n_periods, B, S, Hkv, hd)
+        np_, b, s, hkv, hd = shape
+        spec = [None, None, None, None, None]
+        if shard_seq:
+            if _fits(s, mesh, dp):
+                spec[2] = dp
+        elif _fits(b, mesh, dp):
+            spec[1] = dp
+        if _fits(hkv, mesh, "model"):
+            spec[3] = "model"
+        elif _fits(hd, mesh, "model"):
+            spec[4] = "model"
+        return P(*spec)
+
+    def f(path, leaf):
+        name = _path_str(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if "k_cache" in name or "v_cache" in name or "cross_kv" in name:
+            return NamedSharding(mesh, kv_spec(leaf.shape))
+        if "ssm" in name:
+            # (np, n_mamba, B, H, n, hd)
+            spec = [None] * leaf.ndim
+            if not shard_seq and _fits(leaf.shape[2], mesh, dp):
+                spec[2] = dp
+            for dim in (3, 4, 5):
+                if _fits(leaf.shape[dim], mesh, "model"):
+                    spec[dim] = "model"
+                    break
+            return NamedSharding(mesh, P(*spec))
+        if "rwkv" in name:
+            # (np, B, H, dk, dv)
+            spec = [None] * leaf.ndim
+            if not shard_seq and _fits(leaf.shape[1], mesh, dp):
+                spec[1] = dp
+            for dim in (2, 3, 4):
+                if _fits(leaf.shape[dim], mesh, "model"):
+                    spec[dim] = "model"
+                    break
+            return NamedSharding(mesh, P(*spec))
+        if "shift" in name:
+            spec = [None] * leaf.ndim
+            if not shard_seq and _fits(leaf.shape[1], mesh, dp):
+                spec[1] = dp
+            if _fits(leaf.shape[-1], mesh, "model"):
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        # tokens (B,) / pos ()
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 1 and _fits(leaf.shape[0], mesh, dp):
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, state_shape)
+
+
+def shardings_to_specs(tree: Any) -> Any:
+    return jax.tree.map(lambda s: s.spec, tree,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))

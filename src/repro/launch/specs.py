@@ -1,0 +1,88 @@
+"""Input specifications per (architecture x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — which is what the
+dry-run lowers against, and what the data pipeline must produce at run
+time.  The decode cells include the full KV/SSM state (the dominant memory
+term at 32k/500k context).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.models.transformer import n_periods, period_template
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    if cfg.encoder is not None:
+        batch["frames"] = sds((b, cfg.encoder.n_ctx, cfg.d_model),
+                              jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("labels")
+    return batch
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract version of Model.init_decode_state + step inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    state_shape = jax.eval_shape(
+        lambda: model.init_decode_state(b, max_seq=s))
+    state = dict(state_shape)
+    # decode starts with a full context: pos is traced anyway
+    inputs: dict[str, Any] = {
+        "state": state,
+        "tokens": sds((b,), jnp.int32),
+    }
+    if cfg.encoder is not None:
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        np_ = n_periods(cfg)
+        ctx = cfg.encoder.n_ctx
+        inputs["cross_kv"] = (
+            sds((np_, b, ctx, hkv, hd), cfg.dtype),
+            sds((np_, b, ctx, hkv, hd), cfg.dtype),
+        )
+    return inputs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """The non-parameter inputs of the step function for this cell."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return decode_state_specs(cfg, shape)
+    raise ValueError(f"unknown shape kind {shape.kind!r}")
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg: ModelConfig,
+                         opt_dtype: str = "float32") -> dict:
+    from repro.optim.adamw import init_opt_state
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda p: init_opt_state(p, opt_dtype), params)
+    return {"params": params, "opt": opt}

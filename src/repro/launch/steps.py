@@ -1,0 +1,64 @@
+"""Step functions lowered by the dry-run and driven by the runtime.
+
+* ``train_step(state, batch)``   — loss, grads, AdamW update (donated state)
+* ``prefill_step(params, batch)``— forward logits + prefill KV caches
+* ``serve_step(params, state, tokens[, cross_kv])`` — one decode token
+
+All functions are built per-config and are pure (jit/pjit-ready).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                     remat: str = "full",
+                     transform_grads: Callable | None = None) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+    model = Model(cfg, remat=remat)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state["opt"], params,
+            transform_grads=transform_grads)
+        metrics = {"loss": loss, **metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, remat: str = "none") -> Callable:
+    model = Model(cfg, remat=remat)
+
+    def prefill_step(params: dict, batch: dict):
+        logits, _aux, caches = model.forward(params, batch,
+                                             collect_cache=True)
+        return logits, caches
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    model = Model(cfg)
+
+    def serve_step(params: dict, state: dict, tokens: jax.Array,
+                   cross_kv=None):
+        return model.decode_step(params, state, tokens, cross_kv)
+
+    return serve_step
+
+
+def init_train_state(cfg: ModelConfig, key) -> dict:
+    model = Model(cfg)
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params)}

@@ -1,0 +1,144 @@
+"""Shared model building blocks: norms, activations, RoPE/M-RoPE, MLP.
+
+Functional style: params are plain dicts of jnp arrays; every init_* takes
+a PRNG key and returns the param subtree, every apply is a pure function.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return truncated_normal(key, (d_in, d_out), scale, dtype)
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# activations
+# ----------------------------------------------------------------------
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu_squared":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings (RoPE and qwen2-vl's M-RoPE)
+# ----------------------------------------------------------------------
+def rope_freqs(cfg: ModelConfig) -> jax.Array | None:
+    if not cfg.rope_theta:
+        return None
+    hd = cfg.head_dim
+    return cfg.rope_theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32)
+                              / hd)                      # (hd/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               inv_freq: jax.Array | None,
+               mrope_sections: tuple[int, int, int] | None = None
+               ) -> jax.Array:
+    """x: (B, S, H, hd).  positions: (B, S) or (B, S, 3) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the hd/2 frequency channels are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  For text tokens all three streams are equal, recovering
+    standard RoPE.
+    """
+    if inv_freq is None:
+        return x
+    if positions.ndim == 2:
+        positions = positions[..., None].repeat(3, axis=-1)
+    if mrope_sections is None:
+        pos = positions[..., 0]                          # (B, S)
+        angles = pos[..., None].astype(jnp.float32) * inv_freq  # (B,S,hd/2)
+    else:
+        t, h, w = mrope_sections
+        assert t + h + w == inv_freq.shape[0]
+        sec_pos = jnp.concatenate(
+            [
+                positions[..., 0:1].repeat(t, axis=-1),
+                positions[..., 1:2].repeat(h, axis=-1),
+                positions[..., 2:3].repeat(w, axis=-1),
+            ],
+            axis=-1,
+        )                                                # (B, S, hd/2)
+        angles = sec_pos.astype(jnp.float32) * inv_freq
+    cos = jnp.cos(angles)[:, :, None, :]                 # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+def sinusoidal_positions(n_ctx: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal table (n_ctx, d)."""
+    inv = 10000 ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = jnp.arange(n_ctx, dtype=jnp.float32)[:, None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# gated MLP
+# ----------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_gate": dense_init(k1, d, f, dtype),
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype, scale=f ** -0.5),
+    }
+    if cfg.use_bias:
+        p["b_gate"] = jnp.zeros((f,), dtype)
+        p["b_up"] = jnp.zeros((f,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    if cfg.use_bias:
+        g = g + p["b_gate"]
+        u = u + p["b_up"]
+    h = activation(cfg.act, g) * u
+    y = h @ p["w_down"]
+    if cfg.use_bias:
+        y = y + p["b_down"]
+    return y

@@ -1,0 +1,110 @@
+"""Chunked recurrent linear attention — shared by RWKV-6 and Mamba(SSD).
+
+State-space recurrence with per-token, per-channel decay:
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t          (B, H, dk, dv) state
+    out_t = q_t . S_t                              (mamba/SSD form)
+    out_t = q_t . (S_{t-1} + diag(u) k_t (x) v_t)  (rwkv form, bonus u)
+
+Executed as ``lax.scan`` over token mini-chunks with a small unrolled
+inner loop: state memory stays O(B*H*dk*dv), compute is the exact
+O(T*H*dk*dv) of the linear-attention family, and the HLO is scan-shaped
+(constant-size, sequence-length independent) — which is what keeps the
+40-cell dry-run tractable.  DESIGN.md §Hardware-adaptation discusses why
+this replaces the CUDA chunk-parallel kernels of the source papers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .shard_utils import dp_spec, maybe_shard
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "rwkv_mode"))
+def recurrent_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                   log_decay: jax.Array, u: jax.Array | None = None,
+                   state0: jax.Array | None = None, *, chunk: int = 32,
+                   rwkv_mode: bool = False
+                   ) -> tuple[jax.Array, jax.Array]:
+    """q/k: (B,T,H,dk), v: (B,T,H,dv), log_decay: (B,T,H,dk) or
+    (B,T,H,1) (<= 0).  A trailing 1 (scalar-per-head decay, mamba/SSD)
+    is broadcast lazily inside the step — materializing it to dk first
+    costs dk x the scan-input memory (measured on jamba; §Perf iterD4).
+
+    u: (H, dk) rwkv 'bonus' for the current token (rwkv_mode only).
+    Returns (out (B,T,H,dv), final_state (B,H,dk,dv)).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    if t % chunk:
+        pad = chunk - t % chunk
+        q, k, v, log_decay = (
+            jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            for a in (q, k, v, log_decay))
+    else:
+        pad = 0
+    tp = t + pad
+    n = tp // chunk
+    # (n, chunk, B, H, d*)
+    def to_chunks(a):
+        return a.reshape(b, n, chunk, h, -1).transpose(1, 2, 0, 3, 4)
+    qc, kc, vc, wc = map(to_chunks, (q, k, v, jnp.exp(log_decay)))
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    @jax.checkpoint
+    def step(s, inputs):
+        # remat'd: the backward recomputes the chunk's rank-1 updates from
+        # the (B,H,dk,dv) carry instead of saving one kv outer product per
+        # token — without this, training peaks at O(T/chunk) saved states
+        # (measured: jamba train 2.1 TiB/dev -> see EXPERIMENTS §Perf).
+        qi, ki, vi, wi = inputs
+        outs = []
+        for c in range(chunk):           # small unrolled inner loop
+            qt = qi[c].astype(jnp.float32)       # (B, H, dk)
+            kt = ki[c].astype(jnp.float32)
+            vt = vi[c].astype(jnp.float32)       # (B, H, dv)
+            wt = wi[c].astype(jnp.float32)       # (B, H, dk)
+            kv = kt[..., :, None] * vt[..., None, :]     # (B, H, dk, dv)
+            if rwkv_mode:
+                eff = s + (u.astype(jnp.float32)[None, :, :, None] * kv
+                           if u is not None else kv)
+                out = jnp.einsum("bhk,bhkv->bhv", qt, eff)
+                s = wt[..., None] * s + kv
+            else:
+                s = wt[..., None] * s + kv
+                out = jnp.einsum("bhk,bhkv->bhv", qt, s)
+            outs.append(out)
+        # keep the carried state head-sharded: it is saved once per outer
+        # step for the backward pass, and unsharded it dominates training
+        # memory for large-H hybrids (jamba: 67 MB/step -> 4 MB/step)
+        s = maybe_shard(s, dp_spec(), "model", None, None)
+        return s, jnp.stack(outs)        # (chunk, B, H, dv)
+
+    final, out_chunks = jax.lax.scan(step, state0, (qc, kc, vc, wc))
+    out = out_chunks.reshape(n * chunk, b, h, dv).transpose(1, 0, 2, 3)
+    return out[:, :t].astype(q.dtype), final
+
+
+def recurrent_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                   log_decay: jax.Array, state: jax.Array,
+                   u: jax.Array | None = None, *, rwkv_mode: bool = False
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Single-token decode step.  q/k/log_decay: (B,H,dk), v: (B,H,dv);
+    state: (B,H,dk,dv).  Returns (out (B,H,dv), new_state)."""
+    qt = q.astype(jnp.float32)
+    kv = k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    w = jnp.exp(log_decay.astype(jnp.float32))
+    if rwkv_mode:
+        eff = state + (u.astype(jnp.float32)[None, :, :, None] * kv
+                       if u is not None else kv)
+        out = jnp.einsum("bhk,bhkv->bhv", qt, eff)
+        state = w[..., None] * state + kv
+    else:
+        state = w[..., None] * state + kv
+        out = jnp.einsum("bhk,bhkv->bhv", qt, state)
+    return out, state

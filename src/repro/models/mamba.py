@@ -1,0 +1,93 @@
+"""Mamba block in SSD (Mamba-2 state-space-duality) form — for jamba.
+
+Per-head scalar decay a_t = exp(-softplus(dt) * A_h) with data-dependent
+dt; B_t/C_t projections play k/q; the recurrence is the shared
+``linear_attention`` machinery.  DESIGN.md §Hardware-adaptation records why
+the SSD form replaces Mamba-1's per-(channel, state) selective scan: the
+per-head scalar decay tiles onto the MXU as plain matmuls, while the
+Mamba-1 scan is a CUDA-specific kernel shape with no TPU analogue.
+
+Decode state per layer: S (B, H, d_state, head_dim).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init
+from .linear_attention import recurrent_scan, recurrent_step
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    di = ssm.expand * d
+    h = di // ssm.head_dim
+    n = ssm.d_state
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),       # x and gate z
+        "w_bc": dense_init(ks[1], d, 2 * h * n, dtype),    # B_t, C_t per head
+        "w_dt": dense_init(ks[2], d, h, dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),             # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "w_out": dense_init(ks[3], di, d, dtype, scale=di ** -0.5),
+    }
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Common projections.  x: (B, T, d) -> (xh, z, Bk, Cq, log_a)."""
+    ssm = cfg.ssm
+    b, t, d = x.shape
+    di = ssm.expand * d
+    h = di // ssm.head_dim
+    n = ssm.d_state
+    xz = x @ p["w_in"]
+    xh, z = jnp.split(xz, 2, axis=-1)                      # (B, T, di)
+    bc = x @ p["w_bc"]
+    bk, cq = jnp.split(bc, 2, axis=-1)
+    bk = bk.reshape(b, t, h, n)
+    cq = cq.reshape(b, t, h, n)
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])  # (B, T, H)
+    log_a = -dt * jnp.exp(p["a_log"])                       # <= 0
+    xh = xh.reshape(b, t, h, ssm.head_dim)
+    # discretized input scale: multiply v by dt (ZOH-style)
+    v = xh * dt[..., None].astype(xh.dtype)
+    return xh, z, bk, cq, v, log_a
+
+
+def apply_mamba(cfg: ModelConfig, p: dict, x: jax.Array,
+                state0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, d).  Returns (out, final_state)."""
+    ssm = cfg.ssm
+    b, t, d = x.shape
+    di = ssm.expand * d
+    h = di // ssm.head_dim
+    xh, z, bk, cq, v, log_a = _ssm_inputs(cfg, p, x)
+    # scalar-per-head decay stays (B,T,H,1); the scan broadcasts lazily
+    out, state = recurrent_scan(cq, bk, v, log_a[..., None], state0=state0,
+                                rwkv_mode=False)            # (B,T,H,hd)
+    out = out + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = (out.reshape(b, t, di) * jax.nn.silu(z)) @ p["w_out"]
+    return y, state
+
+
+def apply_mamba_step(cfg: ModelConfig, p: dict, x: jax.Array,
+                     state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decode step.  x: (B, d); state: (B, H, d_state, head_dim)."""
+    b, d = x.shape
+    ssm = cfg.ssm
+    di = ssm.expand * d
+    h = di // ssm.head_dim
+    xh, z, bk, cq, v, log_a = _ssm_inputs(cfg, p, x[:, None])
+    out, state = recurrent_step(cq[:, 0], bk[:, 0], v[:, 0],
+                                log_a[:, 0, :, None], state,
+                                rwkv_mode=False)
+    out = out + xh[:, 0] * p["d_skip"][None, :, None].astype(xh.dtype)
+    y = (out.reshape(b, di) * jax.nn.silu(z[:, 0])) @ p["w_out"]
+    return y, state

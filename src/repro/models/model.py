@@ -1,0 +1,266 @@
+"""Top-level model API: init / forward / loss / decode for every arch.
+
+``Model`` bundles the pure functions the launchers and runtime consume:
+
+* ``init(key)``                 -> params pytree
+* ``forward(params, batch)``    -> logits (+ aux, + prefill KV caches)
+* ``loss(params, batch)``       -> scalar (CE + MoE aux)
+* ``init_decode_state(batch)``  -> KV/SSM caches + pos
+* ``decode_step(params, state, tokens)`` -> (logits, new state)
+* ``encode(params, frames)``    -> encoder memory (whisper)
+
+Batches are dicts; see ``launch/specs.py`` for the exact per-(arch, shape)
+input structures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn
+from . import mamba as mam
+from . import rwkv as rwkv_mod
+from .layers import (
+    apply_norm,
+    dense_init,
+    init_norm,
+    rope_freqs,
+    sinusoidal_positions,
+)
+from .shard_utils import dp_spec, maybe_shard
+from .transformer import (
+    SubLayerSpec,
+    forward_stack,
+    init_stack,
+    n_periods,
+    period_template,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    remat: str = "full"
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 6)
+        params: dict[str, Any] = {
+            # d^-0.5 rows + sqrt(d) lookup scaling keeps tied-unembed
+            # logits O(1) (Gemma-style)
+            "embed": dense_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+            "blocks": init_stack(ks[1], cfg),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(ks[2], cfg.d_model,
+                                           cfg.vocab_size, dtype)
+        if cfg.encoder is not None:
+            enc_cfg = dataclasses.replace(
+                cfg, family="dense", n_layers=cfg.encoder.n_layers,
+                attn_every=1, moe=None)
+            params["encoder"] = {
+                "blocks": init_stack(ks[3], enc_cfg),
+                "final_norm": init_norm(cfg, cfg.d_model),
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * jnp.asarray(self.cfg.d_model ** 0.5, x.dtype)
+        if x.ndim == 3:
+            x = maybe_shard(x, dp_spec(), None, None)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(cfg, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["unembed"]
+        # vocab-parallel logits: keep V sharded over 'model' end to end
+        if logits.ndim == 3:
+            logits = maybe_shard(logits, dp_spec(), None, "model")
+        else:
+            logits = maybe_shard(logits, dp_spec(), "model")
+        return logits
+
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """Whisper encoder: frames (B, n_ctx, d) stub embeddings -> memory."""
+        cfg = self.cfg
+        enc_cfg = dataclasses.replace(
+            cfg, family="dense", n_layers=cfg.encoder.n_layers,
+            attn_every=1, moe=None)
+        b, s, _ = frames.shape
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x, _, _ = forward_stack(enc_cfg, params["encoder"]["blocks"], x,
+                                positions, causal=False, remat=self.remat)
+        return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+    # ------------------------------------------------------------------
+    def forward(self, params, batch: dict, *, collect_cache: bool = False):
+        """Train/prefill forward.  Returns (logits, aux, caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        cross_memory = None
+        if cfg.encoder is not None:
+            cross_memory = self.encode(params, batch["frames"])
+        if cfg.rope_theta == 0.0 and cfg.encoder is not None:
+            x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+        x, aux, caches = forward_stack(
+            cfg, params["blocks"], x, positions, cross_memory=cross_memory,
+            causal=True, collect_cache=collect_cache, remat=self.remat)
+        return self._logits(params, x), aux, caches
+
+    def loss(self, params, batch: dict) -> jax.Array:
+        logits, aux, _ = self.forward(params, batch)
+        labels = batch["labels"]
+        # CE without gathering the (possibly vocab-sharded) logits: the
+        # label logit comes from a one-hot contraction (psum under GSPMD),
+        # never a take_along_axis over the sharded vocab dim.
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1],
+                                dtype=logits.dtype)
+        label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        ce = lse - label_logit
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            ce = ce * mask
+            denom = jnp.maximum(mask.sum(), 1.0)
+        else:
+            denom = ce.size
+        return ce.sum() / denom + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def init_decode_state(self, batch_size: int, max_seq: int,
+                          cross_memory: jax.Array | None = None) -> dict:
+        cfg = self.cfg
+        np_ = n_periods(cfg)
+        template = period_template(cfg)
+        dtype = jnp.dtype(cfg.dtype)
+        # per-row positions: continuous batching gives every slot its own
+        # clock (see runtime/serve_loop.py)
+        state: dict[str, Any] = {
+            "pos": jnp.zeros((batch_size,), jnp.int32)}
+        n_attn = sum(1 for t in template if t.mixer == "attn")
+        n_mamba = sum(1 for t in template if t.mixer == "mamba")
+        n_rwkv = sum(1 for t in template if t.mixer == "rwkv")
+        assert n_attn <= 1, "cache layout assumes <= 1 attn sublayer/period"
+        if n_attn:
+            kv_shape = (np_, batch_size, max_seq, cfg.n_kv_heads,
+                        cfg.head_dim)
+            kv_dt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+            state["k_cache"] = jnp.zeros(kv_shape, kv_dt)
+            state["v_cache"] = jnp.zeros(kv_shape, kv_dt)
+        if n_mamba:
+            h = cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim
+            state["ssm"] = jnp.zeros(
+                (np_, n_mamba, batch_size, h, cfg.ssm.d_state,
+                 cfg.ssm.head_dim), jnp.float32)
+        if n_rwkv:
+            h = cfg.d_model // cfg.rwkv.head_dim
+            state["rwkv"] = jnp.zeros(
+                (np_, batch_size, h, cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                jnp.float32)
+            state["shift_t"] = jnp.zeros((np_, batch_size, cfg.d_model),
+                                         dtype)
+            state["shift_c"] = jnp.zeros((np_, batch_size, cfg.d_model),
+                                         dtype)
+        del cross_memory   # cross K/V handled via precompute_cross_kv
+        return state
+
+    def precompute_cross_kv(self, params, memory: jax.Array):
+        """(n_periods, B, ctx, Hkv, hd) x2 from encoder memory."""
+        cfg = self.cfg
+        cross_stacked = params["blocks"][0]["cross"]   # encdec has P=1
+        return jax.vmap(
+            lambda pp: attn.cross_kv(cfg, pp, memory))(cross_stacked)
+
+    def decode_step(self, params, state: dict, tokens: jax.Array,
+                    cross_kv: tuple[jax.Array, jax.Array] | None = None
+                    ) -> tuple[jax.Array, dict]:
+        """One decode step.  tokens: (B,) int32.  Returns (logits, state)."""
+        cfg = self.cfg
+        template = period_template(cfg)
+        inv_freq = rope_freqs(cfg)
+        pos = state["pos"]                             # (B,)
+        x = self._embed(params, tokens)[:, None]       # (B, 1, d)
+        if cfg.rope_theta == 0.0 and cfg.encoder is not None:
+            tab = sinusoidal_positions(cfg.max_seq_len, cfg.d_model)
+            x = x + jnp.take(tab, pos, axis=0).astype(x.dtype)[:, None]
+
+        xs: dict[str, Any] = {"blocks": params["blocks"]}
+        for key in ("k_cache", "v_cache", "ssm", "rwkv", "shift_t",
+                    "shift_c"):
+            if key in state:
+                xs[key] = state[key]
+        if cross_kv is not None:
+            xs["cross_kv"] = cross_kv
+
+        def period_fn(carry, inp):
+            x = carry
+            new = dict(inp)
+            for si, spec in enumerate(template):
+                p = inp["blocks"][si]
+                h = apply_norm(cfg, p["norm1"], x)
+                if spec.mixer == "attn":
+                    y, k_new, v_new = attn.attention_decode_block(
+                        cfg, p["attn"], h, inp["k_cache"], inp["v_cache"],
+                        pos, inv_freq)
+                    new["k_cache"], new["v_cache"] = k_new, v_new
+                    x = x + y
+                elif spec.mixer == "mamba":
+                    mi = sum(1 for t in template[:si] if t.mixer == "mamba")
+                    y, s_new = mam.apply_mamba_step(
+                        cfg, p["mamba"], h[:, 0], inp["ssm"][mi])
+                    new["ssm"] = new["ssm"].at[mi].set(s_new)
+                    x = x + y[:, None].astype(x.dtype)
+                elif spec.mixer == "rwkv":
+                    y, s_new, sh = rwkv_mod.apply_rwkv_time_mix_step(
+                        cfg, p["rwkv_t"], h[:, 0], inp["shift_t"],
+                        inp["rwkv"])
+                    new["rwkv"], new["shift_t"] = s_new, sh
+                    x = x + y[:, None].astype(x.dtype)
+                if spec.cross and "cross_kv" in inp:
+                    hc = apply_norm(cfg, p["norm_cross"], x)
+                    x = x + attn.cross_attention_block(
+                        cfg, p["cross"], hc, kv=inp["cross_kv"])
+                h2 = apply_norm(cfg, p["norm2"], x)
+                if spec.ffn == "mlp":
+                    from .layers import apply_mlp
+                    x = x + apply_mlp(cfg, p["mlp"], h2)
+                elif spec.ffn == "moe":
+                    from .moe import apply_moe
+                    y, _ = apply_moe(cfg, p["moe"], h2)
+                    x = x + y
+                elif spec.ffn == "rwkv_channel":
+                    y, sh = rwkv_mod.apply_rwkv_channel_mix_step(
+                        cfg, p["rwkv_c"], h2[:, 0], inp["shift_c"])
+                    new["shift_c"] = sh
+                    x = x + y[:, None].astype(x.dtype)
+            new.pop("blocks")
+            new.pop("cross_kv", None)
+            return x, new
+
+        x, new_caches = jax.lax.scan(period_fn, x, xs)
+        logits = self._logits(params, x)[:, 0]         # (B, V)
+        new_state = dict(state)
+        new_state.update(new_caches)
+        new_state["pos"] = pos + 1
+        return logits, new_state

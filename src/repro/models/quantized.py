@@ -1,0 +1,204 @@
+"""Quantized decode path: serve with Iris-organized packed weights.
+
+End-to-end instantiation of the paper for LM serving (dense-family archs):
+
+1. every per-layer weight matrix is quantized to intN (group scales);
+2. codes are stored lane-packed in uint32 (``quant.pack_codes_u32``) — the
+   *bytes that live in HBM*;
+3. an Iris layout orders each layer's bundle into one unified stream (the
+   storage/DMA order; ``core.packing``), replacing 9+ per-tensor buffers
+   with one dense stream per layer;
+4. ``decode_step`` consumes the packed codes directly via the
+   dequant-on-load Pallas matmul (``kernels.packed_matmul``) — dense bf16
+   weights never exist in memory.
+
+``quantize_params`` / ``packed_decode_step`` are exercised by
+examples/packed_serving.py and tests/test_quantized_serving.py, with
+bytes-moved accounting vs the bf16 and padded-int baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.packed_matmul import packed_matmul
+from repro.quant.qtypes import QuantSpec, pack_codes_u32, quantize
+
+from .layers import activation, apply_norm, rope_freqs
+from .model import Model
+from .transformer import n_periods, period_template
+
+#: weight names quantized in a dense decoder sublayer
+_QUANT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+@dataclasses.dataclass
+class PackedParams:
+    """Quantized model params: packed codes + scales + small bf16 leaves."""
+
+    packed: dict              # name -> (n_periods, K*bits/32, N) uint32
+    scales: dict              # name -> (n_periods, K/G, N)
+    other: dict               # embed, norms, biases (unquantized)
+    spec: QuantSpec
+    shapes: dict              # name -> (K, N)
+
+    def hbm_bytes(self) -> int:
+        b = sum(int(x.size) * 4 for x in self.packed.values())
+        b += sum(int(x.size) * 2 for x in self.scales.values())
+        b += sum(int(x.size) * x.dtype.itemsize
+                 for x in jax.tree.leaves(self.other))
+        return b
+
+
+def quantizable(cfg: ModelConfig) -> bool:
+    """The packed decode path covers the dense sublayer template."""
+    t = period_template(cfg)
+    return (len(t) == 1 and t[0].mixer == "attn" and t[0].ffn == "mlp"
+            and not t[0].cross)
+
+
+def quantize_params(cfg: ModelConfig, params: dict,
+                    spec: QuantSpec) -> PackedParams:
+    if not quantizable(cfg):
+        raise NotImplementedError(
+            f"packed decode path supports dense archs; {cfg.name} has "
+            f"template {period_template(cfg)}")
+    blocks = params["blocks"][0]
+    packed: dict[str, Any] = {}
+    scales: dict[str, Any] = {}
+    shapes: dict[str, Any] = {}
+    other: dict[str, Any] = {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "norm1": blocks["norm1"],
+        "norm2": blocks["norm2"],
+    }
+    if "unembed" in params:
+        other["unembed"] = params["unembed"]
+    for sub in ("attn", "mlp"):
+        for name, w in blocks[sub].items():
+            if name in _QUANT_NAMES:
+                k = f"{sub}/{name}"
+
+                def qpack(wl, spec=spec):
+                    qt = quantize(wl, spec)
+                    return (pack_codes_u32(qt.codes, spec.bits), qt.scales)
+
+                pk, sc = jax.vmap(qpack)(w)      # over the period dim
+                packed[k], scales[k] = pk, sc
+                shapes[k] = tuple(w.shape[1:])
+            else:                                 # biases stay dense
+                other[f"{sub}/{name}"] = w
+    return PackedParams(packed=packed, scales=scales, other=other,
+                        spec=spec, shapes=shapes)
+
+
+def _pmm(x2d, pw, sc, spec, interpret):
+    """x2d: (B, K) @ packed (K*bits/32, N) -> (B, N).  Pads B to the MXU
+    tile, K blocks to the group size."""
+    b, k = x2d.shape
+    bm = max(8, 1 << (b - 1).bit_length())
+    if bm != b:
+        x2d = jnp.pad(x2d, ((0, bm - b), (0, 0)))
+    n = pw.shape[1]
+    out = packed_matmul(
+        x2d, pw, sc, bits=spec.bits, group_size=spec.group_size,
+        block_m=bm, block_n=min(128, n), block_k=min(512, k),
+        interpret=interpret)
+    return out[:b]
+
+
+def packed_decode_step(cfg: ModelConfig, pp: PackedParams, state: dict,
+                       tokens: jax.Array, *, interpret: bool = True
+                       ) -> tuple[jax.Array, dict]:
+    """One decode token with dequant-on-load weights (dense archs).
+
+    Mirrors Model.decode_step but every large matmul reads packed codes.
+    """
+    from . import attention as attn
+
+    model = Model(cfg)
+    spec = pp.spec
+    inv_freq = rope_freqs(cfg)
+    pos = state["pos"]
+    b = tokens.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(pp.other["embed"], tokens, axis=0) \
+        * jnp.asarray(cfg.d_model ** 0.5, pp.other["embed"].dtype)
+
+    def mm(name, period, x2d):
+        return _pmm(x2d.astype(jnp.float32), pp.packed[name][period],
+                    pp.scales[name][period], spec, interpret)
+
+    np_ = n_periods(cfg)
+    k_cache, v_cache = state["k_cache"], state["v_cache"]
+    new_k, new_v = [], []
+    for layer in range(np_):
+        hnorm = apply_norm(cfg, jax.tree.map(lambda a: a[layer],
+                                             pp.other["norm1"]), x)
+        q = mm("attn/wq", layer, hnorm).reshape(b, 1, h, hd)
+        kk = mm("attn/wk", layer, hnorm).reshape(b, 1, hkv, hd)
+        vv = mm("attn/wv", layer, hnorm).reshape(b, 1, hkv, hd)
+        if cfg.use_bias:
+            q = q + pp.other["attn/bq"][layer].reshape(1, 1, h, hd)
+            kk = kk + pp.other["attn/bk"][layer].reshape(1, 1, hkv, hd)
+            vv = vv + pp.other["attn/bv"][layer].reshape(1, 1, hkv, hd)
+        pos_b = pos[:, None]
+        q = attn.apply_rope(q, pos_b, inv_freq, cfg.mrope_sections)
+        kk = attn.apply_rope(kk, pos_b, inv_freq, cfg.mrope_sections)
+        rows = jnp.arange(b)
+        kc = k_cache[layer].at[rows, pos].set(
+            kk[:, 0].astype(k_cache.dtype))
+        vc = v_cache[layer].at[rows, pos].set(
+            vv[:, 0].astype(v_cache.dtype))
+        new_k.append(kc)
+        new_v.append(vc)
+        att = attn.decode_attention(q.astype(jnp.bfloat16), kc, vc, pos)
+        y = mm("attn/wo", layer, att.reshape(b, h * hd))
+        if cfg.use_bias:
+            y = y + pp.other["attn/bo"][layer]
+        x = x + y.astype(x.dtype)
+        h2 = apply_norm(cfg, jax.tree.map(lambda a: a[layer],
+                                          pp.other["norm2"]), x)
+        g = mm("mlp/w_gate", layer, h2)
+        u = mm("mlp/w_up", layer, h2)
+        if cfg.use_bias:
+            g = g + pp.other["mlp/b_gate"][layer]
+            u = u + pp.other["mlp/b_up"][layer]
+        hh = activation(cfg.act, g) * u
+        y2 = mm("mlp/w_down", layer, hh)
+        if cfg.use_bias:
+            y2 = y2 + pp.other["mlp/b_down"][layer]
+        x = x + y2.astype(x.dtype)
+
+    x = apply_norm(cfg, pp.other["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ pp.other["embed"].T
+    else:
+        logits = x @ pp.other["unembed"]
+    new_state = dict(state)
+    new_state["k_cache"] = jnp.stack(new_k)
+    new_state["v_cache"] = jnp.stack(new_v)
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+def bytes_per_token_report(cfg: ModelConfig, pp: PackedParams) -> dict:
+    """Weight bytes streamed per decode token: packed vs baselines."""
+    n_elems = sum(int(jnp.prod(jnp.array(s)) * n_periods(cfg))
+                  for s in pp.shapes.values())
+    packed_b = pp.hbm_bytes()
+    pad_bits = 8 if pp.spec.bits > 4 else (4 if pp.spec.bits > 2 else 2)
+    pad_bits = max(pad_bits, 1 << (pp.spec.bits - 1).bit_length())
+    return {
+        "packed_MiB": packed_b / 2**20,
+        "bf16_MiB": (n_elems * 2
+                     + sum(int(x.size) * x.dtype.itemsize
+                           for x in jax.tree.leaves(pp.other))) / 2**20,
+        "padded_int_MiB": (n_elems * pad_bits / 8) / 2**20,
+        "quantized_elems": n_elems,
+    }

@@ -1,0 +1,128 @@
+"""RWKV-6 ("Finch") time-mix and channel-mix blocks (arXiv:2404.05892).
+
+Attention-free: the time-mix is linear attention with a *data-dependent
+per-channel decay* w_t = exp(-exp(w0 + tanh(x A) B)) (the signature Finch
+feature) plus the 'bonus' u for the current token.  Token-shift
+interpolation and output gating follow the reference implementation; the
+decay LoRA rank is configurable.
+
+The recurrence runs through ``linear_attention.recurrent_scan`` (train)
+and ``recurrent_step`` (decode).  Decode state per layer:
+(shift_x (B, d), shift_c (B, d), S (B, H, dk, dk)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init
+from .linear_attention import recurrent_scan, recurrent_step
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    r = cfg.rwkv.decay_lora
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_r": dense_init(ks[0], d, d, dtype),
+        "w_k": dense_init(ks[1], d, d, dtype),
+        "w_v": dense_init(ks[2], d, d, dtype),
+        "w_g": dense_init(ks[3], d, d, dtype),
+        "w_o": dense_init(ks[4], d, d, dtype, scale=d ** -0.5),
+        # data-dependent decay LoRA: w = w0 + tanh(x A) B
+        "decay_a": dense_init(ks[5], d, r, dtype),
+        "decay_b": dense_init(ks[6], r, d, dtype, scale=r ** -0.5),
+        "decay_w0": jnp.full((d,), -2.0, jnp.float32),
+        "bonus_u": jnp.zeros((h, hd), jnp.float32),
+        # token-shift mixing coefficients per projection
+        "mix": jnp.full((5, d), 0.5, jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream: shift right by one token; position 0 sees `prev`."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _decay_log(p: dict, xm: jax.Array) -> jax.Array:
+    """log w_t = -exp(w0 + tanh(x A) B) in (-inf, 0) — Finch decay."""
+    lora = jnp.tanh(xm @ p["decay_a"]) @ p["decay_b"]
+    return -jnp.exp(p["decay_w0"] + lora.astype(jnp.float32))
+
+
+def apply_rwkv_time_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                        prev_shift: jax.Array | None = None,
+                        state0: jax.Array | None = None
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, T, d).  Returns (out, final_state, last_x) for streaming."""
+    b, t, d = x.shape
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    xs = _token_shift(x, prev_shift)
+    mixed = [x + p["mix"][i].astype(x.dtype) * (xs - x) for i in range(5)]
+    rm, km, vm, gm, wm = mixed
+    rr = (rm @ p["w_r"]).reshape(b, t, h, hd)
+    kk = (km @ p["w_k"]).reshape(b, t, h, hd)
+    vv = (vm @ p["w_v"]).reshape(b, t, h, hd)
+    gg = jax.nn.silu(gm @ p["w_g"])
+    logw = _decay_log(p, wm).reshape(b, t, h, hd)
+    out, state = recurrent_scan(rr, kk, vv, logw, u=p["bonus_u"],
+                                state0=state0, rwkv_mode=True)
+    y = (out.reshape(b, t, d) * gg) @ p["w_o"]
+    return y, state, x[:, -1]
+
+
+def apply_rwkv_time_mix_step(cfg: ModelConfig, p: dict, x: jax.Array,
+                             shift_prev: jax.Array, state: jax.Array
+                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode step.  x: (B, d); shift_prev: (B, d); state: (B,H,dk,dk)."""
+    b, d = x.shape
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    mixed = [x + p["mix"][i].astype(x.dtype) * (shift_prev - x)
+             for i in range(5)]
+    rm, km, vm, gm, wm = mixed
+    rr = (rm @ p["w_r"]).reshape(b, h, hd)
+    kk = (km @ p["w_k"]).reshape(b, h, hd)
+    vv = (vm @ p["w_v"]).reshape(b, h, hd)
+    gg = jax.nn.silu(gm @ p["w_g"])
+    logw = _decay_log(p, wm).reshape(b, h, hd)
+    out, state = recurrent_step(rr, kk, vv, logw, state, u=p["bonus_u"],
+                                rwkv_mode=True)
+    y = (out.reshape(b, d) * gg) @ p["w_o"]
+    return y, state, x
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_k": dense_init(k1, d, f, dtype),
+        "w_v": dense_init(k2, f, d, dtype, scale=f ** -0.5),
+        "mix": jnp.full((1, d), 0.5, jnp.float32),
+    }
+
+
+def apply_rwkv_channel_mix(cfg: ModelConfig, p: dict, x: jax.Array,
+                           prev_shift: jax.Array | None = None
+                           ) -> tuple[jax.Array, jax.Array]:
+    xs = _token_shift(x, prev_shift)
+    km = x + p["mix"][0].astype(x.dtype) * (xs - x)
+    h = jnp.square(jax.nn.relu(km @ p["w_k"]))
+    return h @ p["w_v"], x[:, -1]
+
+
+def apply_rwkv_channel_mix_step(cfg: ModelConfig, p: dict, x: jax.Array,
+                                shift_prev: jax.Array
+                                ) -> tuple[jax.Array, jax.Array]:
+    km = x + p["mix"][0].astype(x.dtype) * (shift_prev - x)
+    h = jnp.square(jax.nn.relu(km @ p["w_k"]))
+    return h @ p["w_v"], x

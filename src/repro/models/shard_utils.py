@@ -1,0 +1,50 @@
+"""Activation sharding constraints that degrade gracefully.
+
+``maybe_shard(x, *spec)`` applies a with_sharding_constraint iff a mesh
+context is active; each axis is divisibility-checked against its dim and
+dropped when it doesn't fit.  Model code can therefore annotate its
+activations unconditionally — smoke tests (no mesh) and every arch
+(heterogeneous dims) run the same code path.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _active_mesh():
+    from jax._src import mesh as mesh_lib
+
+    env = mesh_lib.thread_resources.env
+    return None if env.physical_mesh.empty else env.physical_mesh
+
+
+def maybe_shard(x: jax.Array, *spec) -> jax.Array:
+    """spec: one entry per dim — None, 'axis', or ('ax1', 'ax2')."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 0 and dim % size == 0:
+            fixed.append(axes if len(axes) > 1 else axes[0])
+        else:
+            fixed.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def dp_spec() -> tuple:
+    """The data-parallel axis group for activation batch dims."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

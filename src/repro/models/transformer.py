@@ -1,0 +1,195 @@
+"""Unified layer stack for all 10 assigned architectures.
+
+Every model is a ``jax.lax.scan`` over *periods* of stacked per-layer
+params, keeping the HLO size depth-independent (essential for 40-cell
+512-device dry-runs).  A period is the smallest repeating sublayer
+template:
+
+* dense / moe / vlm:  1 sublayer  [attn -> mlp|moe]
+* ssm (rwkv6):        1 sublayer  [time-mix -> channel-mix]
+* hybrid (jamba):     ``attn_every`` sublayers, the last one attention,
+                      the rest mamba; FFNs alternate mlp/moe per parity
+* encdec (whisper):   decoder periods carry a cross-attention; a separate
+                      encoder stack runs first.
+
+Within a period the (static, heterogeneous) sublayers are unrolled; across
+periods everything is scanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn
+from . import mamba as mam
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm, rope_freqs
+from .shard_utils import dp_spec, maybe_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayerSpec:
+    mixer: str                   # "attn" | "mamba" | "rwkv"
+    ffn: str                     # "mlp" | "moe" | "rwkv_channel"
+    cross: bool = False          # whisper decoder cross-attention
+
+
+def period_template(cfg: ModelConfig) -> tuple[SubLayerSpec, ...]:
+    p = max(1, cfg.attn_every)
+    subs = []
+    for s in range(p):
+        if cfg.family == "ssm":
+            subs.append(SubLayerSpec("rwkv", "rwkv_channel"))
+            continue
+        mixer = "attn" if cfg.layer_is_attn(s) else "mamba"
+        ffn = "moe" if cfg.layer_is_moe(s) else "mlp"
+        subs.append(SubLayerSpec(mixer, ffn, cross=cfg.family == "encdec"))
+    return tuple(subs)
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    p = max(1, cfg.attn_every)
+    if cfg.n_layers % p:
+        raise ValueError(f"n_layers={cfg.n_layers} not divisible by "
+                         f"period {p}")
+    return cfg.n_layers // p
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def _init_sublayer(key, cfg: ModelConfig, spec: SubLayerSpec) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    p: dict[str, Any] = {"norm1": init_norm(cfg, cfg.d_model),
+                         "norm2": init_norm(cfg, cfg.d_model)}
+    if spec.mixer == "attn":
+        p["attn"] = attn.init_attention(next(ks), cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mam.init_mamba(next(ks), cfg)
+    elif spec.mixer == "rwkv":
+        p["rwkv_t"] = rwkv_mod.init_rwkv_time_mix(next(ks), cfg)
+    if spec.cross:
+        p["cross"] = attn.init_attention(next(ks), cfg)
+        p["norm_cross"] = init_norm(cfg, cfg.d_model)
+    if spec.ffn == "mlp":
+        p["mlp"] = init_mlp(next(ks), cfg)
+    elif spec.ffn == "moe":
+        p["moe"] = moe_mod.init_moe(next(ks), cfg)
+    elif spec.ffn == "rwkv_channel":
+        p["rwkv_c"] = rwkv_mod.init_rwkv_channel_mix(next(ks), cfg)
+    return p
+
+
+def init_stack(key, cfg: ModelConfig) -> list[dict]:
+    """Per-sublayer param trees, each leaf stacked over n_periods."""
+    template = period_template(cfg)
+    np_ = n_periods(cfg)
+    out = []
+    for si, spec in enumerate(template):
+        sub_key = jax.random.fold_in(key, si)
+        keys = jax.random.split(sub_key, np_)
+        stacked = jax.vmap(
+            lambda k, _spec=spec: _init_sublayer(k, cfg, _spec))(keys)
+        out.append(stacked)
+    return out
+
+
+# ----------------------------------------------------------------------
+# forward (full sequence: train / prefill / encoder)
+# ----------------------------------------------------------------------
+def _sublayer_forward(cfg: ModelConfig, spec: SubLayerSpec, p: dict,
+                      x: jax.Array, positions: jax.Array, inv_freq,
+                      cross_memory=None, causal: bool = True,
+                      collect_cache: bool = False):
+    """Returns (x, aux_loss, cache_kv or None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = apply_norm(cfg, p["norm1"], x)
+    if spec.mixer == "attn":
+        b, s, _ = h.shape
+        if collect_cache:
+            k = attn._project(cfg, p["attn"], h, "k").reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            v = attn._project(cfg, p["attn"], h, "v").reshape(
+                b, s, cfg.n_kv_heads, cfg.head_dim)
+            k = attn.apply_rope(k, positions, inv_freq, cfg.mrope_sections)
+            cache = (k, v)
+        x = x + attn.attention_block(cfg, p["attn"], h, positions, inv_freq,
+                                     causal=causal)
+    elif spec.mixer == "mamba":
+        y, _ = mam.apply_mamba(cfg, p["mamba"], h)
+        x = x + y
+    elif spec.mixer == "rwkv":
+        y, _, _ = rwkv_mod.apply_rwkv_time_mix(cfg, p["rwkv_t"], h)
+        x = x + y
+    if spec.cross and cross_memory is not None:
+        hc = apply_norm(cfg, p["norm_cross"], x)
+        x = x + attn.cross_attention_block(cfg, p["cross"], hc,
+                                           memory=cross_memory)
+    h2 = apply_norm(cfg, p["norm2"], x)
+    if spec.ffn == "mlp":
+        x = x + apply_mlp(cfg, p["mlp"], h2)
+    elif spec.ffn == "moe":
+        # leave the SP (sequence-sharded) regime *once*, in bf16, before
+        # the dispatch: the capacity scatter cannot be sequence-sharded,
+        # and letting GSPMD discover that lazily re-gathers the much
+        # larger (B, S*k, d) f32 dispatch tensors many times per layer
+        # (measured: 3 GiB x ~13 per layer on moonshot; EXPERIMENTS §Perf)
+        h2 = maybe_shard(h2, dp_spec(), None, None)
+        y, aux = moe_mod.apply_moe(cfg, p["moe"], h2)
+        x = x + y
+    elif spec.ffn == "rwkv_channel":
+        y, _ = rwkv_mod.apply_rwkv_channel_mix(cfg, p["rwkv_c"], h2)
+        x = x + y
+    return x, aux, cache
+
+
+def forward_stack(cfg: ModelConfig, blocks: list[dict], x: jax.Array,
+                  positions: jax.Array, *, cross_memory=None,
+                  causal: bool = True, collect_cache: bool = False,
+                  remat: str = "full"):
+    """Scan the period stack.  Returns (x, total_aux, caches or None).
+
+    caches: per attention sublayer, (k, v) stacked over periods.
+    """
+    template = period_template(cfg)
+    inv_freq = rope_freqs(cfg)
+
+    def period_fn(carry, period_params):
+        x = carry
+        # Megatron-style sequence-parallel boundary: the scan carry (the
+        # only activation saved per period under remat) lives with S
+        # sharded over 'model'.  GSPMD turns the surrounding TP
+        # all-reduces into reduce-scatter + all-gather pairs (same bytes)
+        # while the saved residuals shrink by the TP degree — this is
+        # what keeps 100B+ training under HBM (EXPERIMENTS.md §Perf).
+        x = maybe_shard(x, dp_spec(), "model", None)
+        aux_sum = jnp.zeros((), jnp.float32)
+        caches = []
+        for si, spec in enumerate(template):
+            x, aux, cache = _sublayer_forward(
+                cfg, spec, period_params[si], x, positions, inv_freq,
+                cross_memory=cross_memory, causal=causal,
+                collect_cache=collect_cache and spec.mixer == "attn")
+            aux_sum = aux_sum + aux
+            if cache is not None:
+                caches.append(cache)
+        x = maybe_shard(x, dp_spec(), "model", None)
+        return x, (aux_sum, tuple(caches))
+
+    if remat == "full":
+        period_fn = jax.checkpoint(period_fn)
+    elif remat == "dots":
+        period_fn = jax.checkpoint(
+            period_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat != "none":
+        raise ValueError(f"unknown remat policy {remat!r}")
+
+    x, (aux_per_period, caches) = jax.lax.scan(period_fn, x, blocks)
+    return x, aux_per_period.sum(), caches

@@ -1,0 +1,121 @@
+"""AdamW with decoupled weight decay, global-norm clipping and LR schedule.
+
+Self-contained (no optax in the container).  State is two f32 moment trees
+plus the step counter; params may be bf16 (updates are computed in f32 and
+cast back — the memory-light recipe; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any, moment_dtype: str = "float32") -> dict:
+    """``moment_dtype='bfloat16'`` halves optimizer HBM (the 8-bit-Adam
+    family of tricks; update math still runs in f32 — see §Perf)."""
+    dt = jnp.dtype(moment_dtype)
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dt)
+        if hasattr(p, "shape") else jnp.zeros((), dt), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+_NO_DECAY_SUBSTRINGS = ("norm", "bias", "scale", "mix", "bonus", "dt_bias",
+                        "a_log", "decay_w0", "d_skip")
+
+
+def _decay_mask(path: tuple, leaf) -> bool:
+    keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+    joined = "/".join(str(k) for k in keys).lower()
+    if getattr(leaf, "ndim", 0) <= 1:
+        return False
+    return not any(s in joined for s in _NO_DECAY_SUBSTRINGS)
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, opt_state: dict,
+                 params: Any,
+                 transform_grads: Callable[[Any], Any] | None = None
+                 ) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    if transform_grads is not None:
+        grads = transform_grads(grads)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path, p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m.astype(mdt), v.astype(mdt)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat[0]]
+    p_leaves = [x for _, x in flat[0]]
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(opt_state["m"])
+    v_leaves = jax.tree.leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for path, p, g, m, v in zip(paths, p_leaves, g_leaves, m_leaves,
+                                v_leaves):
+        a, b, c = upd(path, p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    treedef = flat[1]
+    params_out = jax.tree_util.tree_unflatten(treedef, new_p)
+    opt_out = {
+        "m": jax.tree_util.tree_unflatten(treedef, new_m),
+        "v": jax.tree_util.tree_unflatten(treedef, new_v),
+        "step": step,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params_out, opt_out, metrics

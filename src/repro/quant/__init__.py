@@ -1,0 +1,8 @@
+from .qtypes import (  # noqa: F401
+    QuantSpec,
+    QuantizedTensor,
+    dequantize,
+    pack_codes_u32,
+    quantize,
+    unpack_codes_u32,
+)

@@ -1,0 +1,136 @@
+"""Custom-precision integer tensor types (paper §1/§2 motivation).
+
+Symmetric, group-wise integer quantization at arbitrary bitwidths 2..8.
+Codes are stored *biased* (unsigned: ``q + 2^(bits-1)``) so they behave as
+plain unsigned bit-fields for the Iris packer, exactly like the paper's
+``ap_uint<W>`` elements.
+
+Two storage formats:
+
+* **element codes** — one unsigned code per element (any width), consumed
+  by the Iris layout packer (``core.codegen``);
+* **lane-packed u32** — ``32/bits`` codes per uint32 word, the
+  hardware-aligned format consumed by the dequant-on-load Pallas matmul
+  (``kernels.packed_matmul``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    bits: int = 4            # element width W
+    group_size: int = 128    # contraction elements sharing one scale
+    scale_dtype: str = "bfloat16"
+
+    def __post_init__(self) -> None:
+        if not 2 <= self.bits <= 8:
+            raise ValueError(f"bits must be in [2, 8], got {self.bits}")
+        if self.group_size <= 0:
+            raise ValueError("group_size must be positive")
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def bias(self) -> int:
+        return 1 << (self.bits - 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Biased unsigned codes + per-(group, out-channel) scales."""
+
+    codes: jax.Array     # (K, N) uint8 — biased codes, one per element
+    scales: jax.Array    # (K // group_size, N)
+    spec: QuantSpec
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.spec, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales = children
+        spec, shape = aux
+        return cls(codes=codes, scales=scales, spec=spec, shape=shape)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def quantize(w: jax.Array, spec: QuantSpec) -> QuantizedTensor:
+    """Quantize a (K, N) matrix group-wise along K (the contraction dim)."""
+    k, n = w.shape
+    if k % spec.group_size != 0:
+        raise ValueError(f"K={k} not divisible by group_size={spec.group_size}")
+    g = k // spec.group_size
+    wg = w.astype(jnp.float32).reshape(g, spec.group_size, n)
+    amax = jnp.max(jnp.abs(wg), axis=1)                      # (g, n)
+    scale = jnp.where(amax > 0, amax / spec.qmax, 1.0)       # (g, n)
+    q = jnp.round(wg / scale[:, None, :])
+    q = jnp.clip(q, -spec.qmax, spec.qmax)
+    codes = (q + spec.bias).astype(jnp.uint8).reshape(k, n)
+    return QuantizedTensor(
+        codes=codes,
+        scales=scale.astype(jnp.dtype(spec.scale_dtype)),
+        spec=spec,
+        shape=(k, n),
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    k, n = qt.shape
+    g = k // qt.spec.group_size
+    q = qt.codes.astype(jnp.float32) - qt.spec.bias
+    q = q.reshape(g, qt.spec.group_size, n)
+    w = q * qt.scales.astype(jnp.float32)[:, None, :]
+    return w.reshape(k, n)
+
+
+# ----------------------------------------------------------------------
+# lane-packed u32 storage (hardware-aligned fast path)
+# ----------------------------------------------------------------------
+def pack_codes_u32(codes: jax.Array, bits: int) -> jax.Array:
+    """(K, N) uint8 codes -> (K // lanes, N) uint32, lanes = 32 // bits.
+
+    Lane ``l`` of word ``r`` holds code ``codes[r * lanes + l]`` at bit
+    position ``l * bits`` (LSB-first) — matching the Iris bus convention.
+    Requires ``32 % bits == 0`` (bits in {2, 4, 8}); other widths go through
+    the general Iris layout packer instead.
+    """
+    if 32 % bits != 0:
+        raise ValueError(f"lane packing needs 32 % bits == 0, got {bits}")
+    lanes = 32 // bits
+    k, n = codes.shape
+    if k % lanes != 0:
+        raise ValueError(f"K={k} not divisible by lanes={lanes}")
+    c = codes.astype(jnp.uint32).reshape(k // lanes, lanes, n)
+    shifts = (jnp.arange(lanes, dtype=jnp.uint32) * bits)[None, :, None]
+    return jnp.bitwise_or.reduce(c << shifts, axis=1)
+
+
+def unpack_codes_u32(packed: jax.Array, bits: int, k: int) -> jax.Array:
+    """Inverse of :func:`pack_codes_u32` -> (K, N) uint8 codes."""
+    lanes = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = (jnp.arange(lanes, dtype=jnp.uint32) * bits)[None, :, None]
+    c = (packed[:, None, :] >> shifts) & mask
+    return c.reshape(k, packed.shape[-1]).astype(jnp.uint8)
+
+
+def quant_error_bound(spec: QuantSpec) -> float:
+    """Half an LSB of the symmetric grid, in units of the group amax."""
+    return 0.5 / spec.qmax
+
+
+def codes_as_numpy_elements(qt: QuantizedTensor) -> np.ndarray:
+    """Flatten codes to uint64 element stream for the Iris packer."""
+    return np.asarray(qt.codes).reshape(-1).astype(np.uint64)

@@ -1,0 +1,109 @@
+"""Pipeline parallelism: GPipe-style microbatching over a 'stage' mesh axis.
+
+Opt-in runtime feature (the production meshes use DP x TP; PP composes on
+top for >2-pod deployments where a model's layers exceed one pod's HBM).
+The schedule is the classic loop: with S stages and M microbatches, run
+S + M - 1 ticks; in tick t, stage s processes microbatch t - s.  The
+stage-to-stage handoff is a ``jax.lax.ppermute`` over the 'stage' axis
+inside ``shard_map`` — the TPU-native equivalent of NCCL send/recv.
+
+Bubble fraction = (S - 1) / (S + M - 1); the tests assert the schedule
+produces exactly that many idle slots and that the pipelined forward
+matches the single-device reference bitwise (f32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    n_microbatches: int
+
+    @property
+    def n_ticks(self) -> int:
+        return self.n_stages + self.n_microbatches - 1
+
+    @property
+    def bubble_fraction(self) -> float:
+        return (self.n_stages - 1) / self.n_ticks
+
+
+def pipeline_forward(stage_fn: Callable, mesh: Mesh, cfg: PipelineConfig,
+                     stage_params, x_microbatches: jax.Array) -> jax.Array:
+    """Run microbatches through a linear pipeline of stages.
+
+    stage_fn(params_for_stage, x) -> x           (same shape)
+    stage_params: pytree with leading dim n_stages (sharded over 'stage')
+    x_microbatches: (M, mb, ...) microbatched input (replicated)
+    Returns (M, mb, ...) outputs after all stages.
+    """
+    s, m = cfg.n_stages, cfg.n_microbatches
+    assert x_microbatches.shape[0] == m
+
+    def per_stage(params, xs):
+        # params: stage-local (leading dim 1); xs: (M, mb, ...) replicated
+        params = jax.tree.map(lambda a: a[0], params)
+        stage_id = jax.lax.axis_index("stage")
+        mb_shape = xs.shape[1:]
+        # carries must be 'stage'-varying from the start (shard_map vma typing)
+        buf = jax.lax.pvary(jnp.zeros(mb_shape, xs.dtype), ("stage",))
+        outs = jax.lax.pvary(jnp.zeros_like(xs), ("stage",))
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any); others use the carry
+            mb_idx = jnp.clip(t, 0, m - 1)
+            inject = jax.lax.dynamic_index_in_dim(xs, mb_idx, 0,
+                                                  keepdims=False)
+            cur = jnp.where(stage_id == 0,
+                            jnp.where(t < m, inject, jnp.zeros_like(buf)),
+                            buf)
+            active = (t >= stage_id) & (t - stage_id < m)
+            y = stage_fn(params, cur)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # the last stage writes finished microbatch t - (S-1)
+            out_idx = jnp.clip(t - (s - 1), 0, m - 1)
+            done = (stage_id == s - 1) & (t >= s - 1)
+            updated = jax.lax.dynamic_update_index_in_dim(
+                outs, y, out_idx, 0)
+            outs = jnp.where(done, updated, outs)
+            # hand off to the next stage (ring permute; last->first unused)
+            nxt = jax.lax.ppermute(
+                y, "stage", [(i, (i + 1) % s) for i in range(s)])
+            return nxt, outs
+
+        buf, outs = jax.lax.fori_loop(0, cfg.n_ticks, tick, (buf, outs))
+        # only the last stage holds real outputs; share them back
+        outs = jax.lax.psum(
+            jnp.where(stage_id == s - 1, outs, jnp.zeros_like(outs)),
+            "stage")
+        return outs
+
+    fn = jax.jit(
+        jax.shard_map(
+            per_stage, mesh=mesh,
+            in_specs=(P("stage"), P()),
+            out_specs=P(),
+        ))
+    return fn(stage_params, x_microbatches)
+
+
+def schedule_table(cfg: PipelineConfig) -> list[list[int | None]]:
+    """tick x stage table of microbatch ids (None = bubble) — for tests
+    and the DESIGN.md illustration."""
+    table = []
+    for t in range(cfg.n_ticks):
+        row = []
+        for stg in range(cfg.n_stages):
+            mb = t - stg
+            row.append(mb if 0 <= mb < cfg.n_microbatches else None)
+        table.append(row)
+    return table

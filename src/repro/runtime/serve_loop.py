@@ -1,0 +1,125 @@
+"""Batched serving loop with continuous batching and Iris-packed weights.
+
+The serving runtime drives ``Model.decode_step`` over a slot-based request
+batch: finished sequences release their slot, queued requests are admitted
+into free slots (continuous batching), and the KV/SSM state is reused
+in place.  With ``packed_weights=True`` the parameters are int-quantized,
+laid out by the Iris scheduler into unified per-layer stream buffers, and
+decoded on the fly — the paper's technique as a first-class serving
+feature (see core/packing.py; bytes-moved accounting is reported by the
+benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeStats:
+    steps: int = 0
+    tokens_generated: int = 0
+    completed: int = 0
+    admitted: int = 0
+
+
+class ServeLoop:
+    """Slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(self, model, params, batch_size: int, max_seq: int,
+                 eos_token: int | None = None,
+                 sample: Callable[[jax.Array, int], int] | None = None):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.eos = eos_token
+        self.sample = sample or (lambda logits, uid: int(jnp.argmax(logits)))
+        self.state = model.init_decode_state(batch_size, max_seq)
+        self.slots: list[Request | None] = [None] * batch_size
+        self.slot_pos = np.zeros(batch_size, dtype=np.int64)
+        self.queue: list[Request] = []
+        self.stats = ServeStats()
+        self._step = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.batch_size):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self.slot_pos[i] = 0
+                self._reset_slot(i)
+                self.stats.admitted += 1
+
+    def _reset_slot(self, i: int) -> None:
+        """Zero slot i's clock and recurrent state (KV needs no clearing:
+        the per-row position mask hides stale entries)."""
+        st = self.state
+        st["pos"] = st["pos"].at[i].set(0)
+        if "ssm" in st:
+            st["ssm"] = st["ssm"].at[:, :, i].set(0.0)
+        if "rwkv" in st:
+            st["rwkv"] = st["rwkv"].at[:, i].set(0.0)
+        for k in ("shift_t", "shift_c"):
+            if k in st:
+                st[k] = st[k].at[:, i].set(0.0)
+
+    def _next_tokens(self) -> np.ndarray:
+        toks = np.zeros(self.batch_size, dtype=np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            p = int(self.slot_pos[i])
+            if p < len(req.prompt):
+                toks[i] = req.prompt[p]
+            elif req.generated:
+                toks[i] = req.generated[-1]
+        return toks
+
+    def step(self) -> None:
+        """One decode step across all active slots."""
+        self._admit()
+        toks = jnp.asarray(self._next_tokens())
+        logits, self.state = self._step(self.params, self.state, toks, None)
+        self.stats.steps += 1
+        logits_np = np.asarray(logits, dtype=np.float32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slot_pos[i] += 1
+            p = int(self.slot_pos[i])
+            if p < len(req.prompt):
+                continue                      # still consuming the prompt
+            tok = self.sample(logits_np[i], req.uid)
+            req.generated.append(tok)
+            self.stats.tokens_generated += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or (self.eos is not None and tok == self.eos)
+                    or p >= self.max_seq - 1):
+                req.done = True
+                self.stats.completed += 1
+                self.slots[i] = None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> ServeStats:
+        while (any(s is not None for s in self.slots) or self.queue):
+            if self.stats.steps >= max_steps:
+                break
+            self.step()
+        return self.stats

@@ -1,0 +1,140 @@
+"""Fault-tolerant training loop.
+
+Production concerns handled here (and unit-tested in
+tests/test_runtime.py):
+
+* **checkpoint/restart** — async CheckpointManager every
+  ``ckpt_interval`` steps, data-pipeline state inside the checkpoint,
+  automatic resume from the latest complete step on (re)start;
+* **node-failure recovery** — a step that raises is retried from the last
+  checkpoint up to ``max_restarts`` times (the same path a rescheduled
+  pod takes after a hardware failure);
+* **straggler mitigation** — per-step wall-time EWMA; steps slower than
+  ``straggler_factor`` x the EWMA are logged and counted, and a pluggable
+  ``on_straggler`` hook lets the cluster layer replace the slow host
+  (here: the hook is invoked; in tests we assert it fires);
+* **NaN/overflow guard** — non-finite loss skips the update (the state
+  from the previous step is kept) rather than poisoning the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import SyntheticLMPipeline
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_interval: int = 25
+    keep_n: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+    log_interval: int = 10
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_run: int
+    final_loss: float
+    losses: list
+    restarts: int
+    stragglers: int
+    skipped_nonfinite: int
+    resumed_from: int | None
+
+
+def run_training(
+    step_fn: Callable[[Any, dict], tuple[Any, dict]],
+    init_state_fn: Callable[[], Any],
+    pipeline: SyntheticLMPipeline,
+    ckpt_dir: str,
+    cfg: TrainLoopConfig = TrainLoopConfig(),
+    on_straggler: Callable[[int, float], None] | None = None,
+    fail_injector: Callable[[int], None] | None = None,
+    to_batch: Callable[[dict], dict] | None = None,
+) -> TrainReport:
+    """Drive ``step_fn`` to ``total_steps`` with full fault handling.
+
+    ``fail_injector(step)`` (tests only) may raise to simulate node loss.
+    """
+    mgr = CheckpointManager(ckpt_dir, keep_n=cfg.keep_n)
+    state = init_state_fn()
+    resumed_from = None
+    latest = mgr.latest_step()
+    if latest is not None:
+        state, extra = mgr.restore(state, step=latest)
+        pipeline.load_state_dict(extra["pipeline"])
+        resumed_from = latest
+
+    losses: list[float] = []
+    restarts = stragglers = skipped = 0
+    ewma: float | None = None
+    step = pipeline.state.step
+
+    while step < cfg.total_steps:
+        t0 = time.monotonic()
+        try:
+            if fail_injector is not None:
+                fail_injector(step)
+            batch = pipeline.next_batch()
+            if to_batch is not None:
+                batch = to_batch(batch)
+            new_state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                skipped += 1
+                step += 1
+                continue                      # keep previous state
+            state = new_state
+            losses.append(loss)
+        except KeyboardInterrupt:             # pragma: no cover
+            raise
+        except Exception:
+            restarts += 1
+            if restarts > cfg.max_restarts:
+                raise
+            # node failure path: reload last good checkpoint + data state
+            latest = mgr.latest_step()
+            state = init_state_fn()
+            if latest is not None:
+                state, extra = mgr.restore(state, step=latest)
+                pipeline.load_state_dict(extra["pipeline"])
+            else:
+                pipeline.load_state_dict({"seed": pipeline.state.seed,
+                                          "step": 0})
+            step = pipeline.state.step
+            continue
+
+        dt = time.monotonic() - t0
+        if ewma is not None and dt > cfg.straggler_factor * ewma:
+            stragglers += 1
+            if on_straggler is not None:
+                on_straggler(step, dt)
+        if len(losses) >= 2:
+            # seed the EWMA from the second step on: step 1 carries jit
+            # compilation and would mask real stragglers for many steps
+            ewma = dt if ewma is None else (
+                cfg.ewma_alpha * dt + (1 - cfg.ewma_alpha) * ewma)
+
+        step += 1
+        if step % cfg.ckpt_interval == 0 or step == cfg.total_steps:
+            mgr.save_async(step, state,
+                           extra={"pipeline": pipeline.state_dict()})
+    mgr.wait()
+    return TrainReport(
+        steps_run=len(losses),
+        final_loss=losses[-1] if losses else float("nan"),
+        losses=losses,
+        restarts=restarts,
+        stragglers=stragglers,
+        skipped_nonfinite=skipped,
+        resumed_from=resumed_from,
+    )

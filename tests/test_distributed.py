@@ -1,0 +1,222 @@
+"""Distribution tests that need multiple (forced host) devices.
+
+Each test runs in a subprocess with XLA_FLAGS set before jax import, so
+the main pytest process keeps its single-device view.
+"""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_sub(body: str, n_devices: int = 8, timeout: int = 560) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={n_devices}")
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+        print("SUBPROCESS_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"})
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "SUBPROCESS_OK" in r.stdout
+    return r.stdout
+
+
+class TestMesh:
+    def test_production_meshes_construct(self):
+        run_sub("""
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert m1.shape == {"data": 16, "model": 16}
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.shape == {"pod": 2, "data": 16, "model": 16}
+        assert m2.devices.size == 512
+        """, n_devices=512)
+
+
+class TestShardedTrainStep:
+    def test_train_step_runs_on_2x4_mesh(self):
+        run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.sharding import (param_shardings,
+            opt_state_shardings, batch_sharding)
+        from repro.launch.steps import build_train_step, init_train_state
+        cfg = get_config("smollm-135m").reduced(
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=64, head_dim=16)
+        mesh = make_debug_mesh((2, 4), ("data", "model"))
+        with mesh:
+            state = init_train_state(cfg, jax.random.PRNGKey(0))
+            ps = param_shardings(state["params"], mesh, fsdp=True)
+            os_ = opt_state_shardings(state["opt"], ps, mesh)
+            state = jax.device_put(state, {"params": ps, "opt": os_})
+            batch = {
+                "tokens": jnp.zeros((4, 16), jnp.int32),
+                "labels": jnp.zeros((4, 16), jnp.int32),
+            }
+            bs = batch_sharding(batch, mesh)
+            batch = jax.device_put(batch, bs)
+            step = jax.jit(build_train_step(cfg),
+                           in_shardings=({"params": ps, "opt": os_}, bs),
+                           donate_argnums=(0,))
+            state2, metrics = step(state, batch)
+            loss = float(metrics["loss"])
+            assert np.isfinite(loss), loss
+            state3, m2 = step(state2, batch)
+            assert float(m2["loss"]) < loss + 1.0
+        """)
+
+    def test_serve_step_runs_on_2x4_mesh(self):
+        run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.sharding import (param_shardings,
+            decode_state_shardings, batch_sharding)
+        from repro.launch.steps import build_serve_step
+        from repro.models.model import Model
+        cfg = get_config("jamba-1.5-large-398b").reduced()
+        model = Model(cfg, remat="none")
+        mesh = make_debug_mesh((2, 4), ("data", "model"))
+        with mesh:
+            params = model.init(jax.random.PRNGKey(0))
+            ps = param_shardings(params, mesh, fsdp=False)
+            params = jax.device_put(params, ps)
+            state = model.init_decode_state(4, max_seq=32)
+            ss = decode_state_shardings(state, mesh)
+            state = jax.device_put(state, ss)
+            toks = jnp.zeros((4,), jnp.int32)
+            step = jax.jit(build_serve_step(cfg))
+            logits, state = step(params, state, toks)
+            assert logits.shape == (4, cfg.vocab_size)
+            assert np.isfinite(np.asarray(logits, np.float32)).all()
+        """)
+
+
+class TestElastic:
+    def test_reshard_preserves_values(self):
+        run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_debug_mesh
+        from repro.runtime.elastic import reshard_live, validate_resharding
+        mesh8 = make_debug_mesh((2, 4), ("data", "model"))
+        mesh4 = make_debug_mesh((1, 4), ("data", "model"))
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                "b": jnp.ones((4,), jnp.bfloat16)}
+        sh8 = {"w": NamedSharding(mesh8, P("data", "model")),
+               "b": NamedSharding(mesh8, P())}
+        placed = jax.device_put(tree, sh8)
+        sh4 = {"w": NamedSharding(mesh4, P("data", "model")),
+               "b": NamedSharding(mesh4, P())}
+        moved = reshard_live(placed, sh4)
+        validate_resharding(placed, moved)
+        assert moved["w"].sharding.mesh.devices.size == 4
+        """)
+
+    def test_checkpoint_restore_onto_mesh(self, tmp_path):
+        run_sub(f"""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint.checkpoint import CheckpointManager
+        from repro.launch.mesh import make_debug_mesh
+        tree = {{"w": jnp.arange(32, dtype=jnp.bfloat16).reshape(8, 4)}}
+        mgr = CheckpointManager(r"{tmp_path}", keep_n=2)
+        mgr.save(1, tree)
+        mesh = make_debug_mesh((2, 2), ("data", "model"))
+        sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
+        out, _ = mgr.restore(tree, shardings=sh)
+        np.testing.assert_array_equal(
+            np.asarray(out["w"], np.float32),
+            np.asarray(tree["w"], np.float32))
+        assert out["w"].sharding.mesh.devices.size == 4
+        """)
+
+
+class TestPipelineParallel:
+    def test_schedule_table_bubbles(self):
+        from repro.runtime.pipeline_par import PipelineConfig, schedule_table
+        cfg = PipelineConfig(n_stages=4, n_microbatches=8)
+        table = schedule_table(cfg)
+        assert len(table) == 11
+        bubbles = sum(row.count(None) for row in table)
+        assert bubbles == (4 - 1) * 4     # (S-1) ramp-up + ramp-down slots
+        assert abs(cfg.bubble_fraction - 3 / 11) < 1e-9
+
+    def test_pipeline_matches_reference(self):
+        run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.launch.mesh import make_debug_mesh
+        from repro.runtime.pipeline_par import (PipelineConfig,
+                                                pipeline_forward)
+        mesh = make_debug_mesh((4,), ("stage",))
+        cfg = PipelineConfig(n_stages=4, n_microbatches=6)
+        key = jax.random.PRNGKey(0)
+        d = 16
+        ws = jax.random.normal(key, (4, d, d)) * 0.3
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (6, 2, d))
+        out = pipeline_forward(stage_fn, mesh, cfg, ws, x)
+        ref = x
+        for s in range(4):
+            ref = jnp.tanh(ref @ ws[s])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        """)
+
+
+class TestMiniDryRun:
+    def test_reduced_cell_on_small_production_style_mesh(self):
+        """Full dry-run machinery on a (4, 4) mesh with a reduced config."""
+        run_sub("""
+        import jax
+        import numpy as np
+        from repro.configs import get_config, SHAPES
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.sharding import (param_shardings,
+            opt_state_shardings, batch_sharding)
+        from repro.launch.specs import abstract_train_state
+        from repro.launch.steps import build_train_step
+        from repro.launch import roofline as rl
+        import dataclasses, jax.numpy as jnp
+        cfg = get_config("moonshot-v1-16b-a3b").reduced()
+        mesh = make_debug_mesh((4, 4), ("data", "model"))
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=128,
+                                    global_batch=8)
+        with mesh:
+            st = abstract_train_state(cfg)
+            ps = param_shardings(st["params"], mesh, fsdp=True)
+            os_ = opt_state_shardings(st["opt"], ps, mesh)
+            batch = {"tokens": jax.ShapeDtypeStruct((8, 128), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((8, 128), jnp.int32)}
+            bs = batch_sharding(batch, mesh)
+            lowered = jax.jit(build_train_step(cfg),
+                in_shardings=({"params": ps, "opt": os_}, bs),
+                donate_argnums=(0,)).lower(st, batch)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        assert cost.get("flops", 0) > 0
+        coll = rl.collective_bytes(compiled.as_text())
+        assert coll.total_bytes > 0      # sharded training must communicate
+        mem = compiled.memory_analysis()
+        assert mem.temp_size_in_bytes > 0
+        terms = rl.roofline_terms(cost, coll, 16, rl.model_flops(cfg, shape))
+        assert terms.compute_s > 0 and terms.bottleneck in (
+            "compute", "memory", "collective")
+        """, n_devices=16)

@@ -1,0 +1,184 @@
+"""Faithful-reproduction tests: every worked number in the paper.
+
+§4 example (Table 3/4, Figs. 3-5), Table 6 (Inverse Helmholtz), and
+Table 7 (Matrix Multiplication).
+"""
+import pytest
+
+from repro.core.baselines import (
+    hls_padded_layout,
+    homogeneous_layout,
+    naive_layout,
+)
+from repro.core.iris import schedule
+from repro.core.task import (
+    INV_HELMHOLTZ,
+    PAPER_EXAMPLE,
+    ArraySpec,
+    LayoutProblem,
+    make_problem,
+    matmul_problem,
+)
+
+
+class TestSection4Example:
+    def test_table4_heights_and_deltas(self):
+        p = PAPER_EXAMPLE
+        by = {a.name: a for a in p.arrays}
+        assert p.d_max == 6
+        # Table 4 rows: delta_j and h(j)
+        assert by["A"].delta(p.m) == 8 and by["A"].height(p.m) == 2
+        assert by["C"].delta(p.m) == 8 and by["C"].height(p.m) == 2
+        assert by["E"].delta(p.m) == 6 and by["E"].height(p.m) == 2
+        assert by["B"].delta(p.m) == 6 and by["B"].height(p.m) == 3
+        assert by["D"].delta(p.m) == 5 and by["D"].height(p.m) == 4
+        # release times r_j = d_max - d_j
+        assert [p.release_time(a) for a in p.arrays] == [4, 0, 3, 0, 3]
+        assert p.p_tot == 69
+
+    def test_naive_fig3(self):
+        m = naive_layout(PAPER_EXAMPLE).metrics()
+        assert m.c_max == 19
+        assert m.l_max == 13           # "D would arrive 13 cycles after d=6"
+        assert m.efficiency == pytest.approx(69 / (19 * 8))   # 45.4%
+
+    def test_homogeneous_fig4(self):
+        m = homogeneous_layout(PAPER_EXAMPLE).metrics()
+        assert m.c_max == 13
+        assert m.l_max == 7
+        assert m.efficiency == pytest.approx(69 / (13 * 8))   # 66.3%
+
+    def test_iris_fig5(self):
+        lay = schedule(PAPER_EXAMPLE)
+        lay.validate()
+        m = lay.metrics()
+        assert m.c_max == 9
+        assert m.l_max == 3
+        assert m.efficiency == pytest.approx(69 / (9 * 8))    # 95.8%
+        assert m.wasted_bits == 3                             # "wasting only 3 bits"
+
+    def test_layouts_are_valid(self):
+        for fn in (naive_layout, homogeneous_layout, hls_padded_layout):
+            fn(PAPER_EXAMPLE).validate()
+
+
+class TestTable6InvHelmholtz:
+    """Table 6: layout metrics with varied delta/W."""
+
+    def test_naive_column(self):
+        m = homogeneous_layout(INV_HELMHOLTZ).metrics()
+        assert m.c_max == 697
+        assert m.efficiency == pytest.approx(0.998, abs=5e-4)
+        assert m.fifo_depth == {"u": 998, "S": 90, "D": 998}
+
+    @pytest.mark.parametrize(
+        "dw,c_max,eff,l_max,fifo_s",
+        [
+            (4, 696, 0.999, 333, 30),
+            (3, 704, 0.988, 341, 30),
+            (2, 711, 0.979, 348, 15),
+            (1, 1361, 0.511, 998, 0),
+        ],
+    )
+    def test_iris_columns(self, dw, c_max, eff, l_max, fifo_s):
+        p = make_problem(
+            256,
+            [(a.name, a.width, a.depth, a.due) for a in INV_HELMHOLTZ.arrays],
+            max_lanes=dw,
+        )
+        lay = schedule(p)
+        lay.validate()
+        m = lay.metrics()
+        assert m.c_max == c_max
+        assert m.efficiency == pytest.approx(eff, abs=1e-3)
+        assert m.l_max == l_max
+        assert m.fifo_depth["S"] == fifo_s
+
+    def test_iris_fifo_reduction_vs_naive(self):
+        """Paper: -33% u, -36% D, -67% S (approximately)."""
+        naive = homogeneous_layout(INV_HELMHOLTZ).metrics().fifo_depth
+        iris = schedule(INV_HELMHOLTZ).metrics().fifo_depth
+        assert iris["u"] <= naive["u"] * 0.68
+        assert iris["D"] <= naive["D"] * 0.65
+        assert iris["S"] <= naive["S"] * 0.34
+
+    def test_dw1_eliminates_fifos(self):
+        """delta/W=1: one element per array per cycle -> no extra ports."""
+        p = make_problem(
+            256,
+            [(a.name, a.width, a.depth, a.due) for a in INV_HELMHOLTZ.arrays],
+            max_lanes=1,
+        )
+        lay = schedule(p)
+        assert all(d == 0 for d in lay.fifo_depths())
+        assert max(lay.max_concurrent_elems()) == 1
+
+
+class TestTable7MatMul:
+    def test_w64_naive(self):
+        m = homogeneous_layout(matmul_problem(64, 64)).metrics()
+        assert m.c_max == 314
+        assert m.l_max == 157
+        assert m.efficiency == pytest.approx(0.995, abs=5e-4)
+        assert m.fifo_depth == {"A": 468, "B": 468}
+
+    def test_w64_iris(self):
+        lay = schedule(matmul_problem(64, 64))
+        lay.validate()
+        m = lay.metrics()
+        assert m.c_max == 313
+        assert m.l_max == 156
+        assert m.efficiency == pytest.approx(0.998, abs=5e-4)
+        assert m.fifo_depth == {"A": 312, "B": 312}   # paper: -33% memory
+
+    @pytest.mark.parametrize(
+        "wa,wb,naive_fifo,iris_eff_min",
+        [
+            # Paper's FIFO-depth rows reproduce exactly; its custom-width
+            # C_max/eff rows are internally inconsistent (DESIGN.md §2), so
+            # we assert our reproduction and the qualitative claim.
+            ((33), (31), {"A": 535, "B": 546}, 0.97),
+            ((30), (19), {"A": 546, "B": 576}, 0.96),
+        ],
+    )
+    def test_custom_widths(self, wa, wb, naive_fifo, iris_eff_min):
+        p = matmul_problem(wa, wb)
+        nm = homogeneous_layout(p).metrics()
+        assert nm.fifo_depth == naive_fifo
+        im = schedule(p).metrics()
+        assert im.efficiency > nm.efficiency        # Iris beats naive
+        assert im.efficiency >= iris_eff_min
+        assert im.c_max < nm.c_max
+        assert im.l_max < nm.l_max
+        assert sum(im.fifo_depth.values()) < sum(nm.fifo_depth.values())
+
+    def test_hls_padding_is_worse_for_custom_widths(self):
+        """§1 motivation: HLS lane-padding wastes bandwidth on odd widths."""
+        p = matmul_problem(33, 31)
+        hls = hls_padded_layout(p).metrics()
+        iris = schedule(p).metrics()
+        assert iris.efficiency > hls.efficiency + 0.20
+
+
+class TestProblemSpec:
+    def test_json_roundtrip(self):
+        p = PAPER_EXAMPLE
+        q = LayoutProblem.from_json(p.to_json())
+        assert q == p
+
+    def test_invalid_specs_rejected(self):
+        with pytest.raises(ValueError):
+            ArraySpec("x", 0, 4, 0)
+        with pytest.raises(ValueError):
+            ArraySpec("x", 4, 0, 0)
+        with pytest.raises(ValueError):
+            ArraySpec("x", 4, 4, -1)
+        with pytest.raises(ValueError):
+            LayoutProblem(m=8, arrays=(ArraySpec("x", 9, 1, 0),)).arrays[0].delta(8)
+        with pytest.raises(ValueError):
+            make_problem(8, [("x", 2, 2, 0), ("x", 3, 2, 0)])
+
+    def test_element_wider_than_bus(self):
+        p = make_problem(8, [("w", 16, 4, 0)])
+        with pytest.raises(ValueError):
+            schedule(p)

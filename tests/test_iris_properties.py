@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) for the Iris scheduler's invariants."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.baselines import homogeneous_layout, naive_layout
+from repro.core.iris import schedule
+from repro.core.layout import Layout
+from repro.core.task import ArraySpec, LayoutProblem
+
+
+@st.composite
+def problems(draw, max_arrays=6, max_width=12, max_depth=24, max_due=40, m_choices=(8, 16, 32, 64)):
+    m = draw(st.sampled_from(m_choices))
+    n = draw(st.integers(1, max_arrays))
+    arrays = []
+    for i in range(n):
+        w = draw(st.integers(1, min(max_width, m)))
+        d = draw(st.integers(1, max_depth))
+        due = draw(st.integers(0, max_due))
+        arrays.append(ArraySpec(f"a{i}", w, d, due))
+    return LayoutProblem(m=m, arrays=tuple(arrays))
+
+
+@given(problems())
+@settings(max_examples=150, deadline=None)
+def test_schedule_is_valid_and_complete(p):
+    lay = schedule(p)
+    lay.validate()   # no bus overflow, no overlap, every element exactly once
+
+
+@given(problems())
+@settings(max_examples=150, deadline=None)
+def test_cmax_lower_bound(p):
+    """C_max * m >= p_tot and C_max >= max over arrays of min cycles."""
+    lay = schedule(p)
+    m = lay.metrics()
+    assert m.c_max * p.m >= p.p_tot
+    assert 0 < m.efficiency <= 1.0
+    for a in p.arrays:
+        assert m.c_max >= a.height(p.m)
+
+
+@given(problems())
+@settings(max_examples=100, deadline=None)
+def test_iris_never_worse_than_homogeneous_cmax(p):
+    """Iris packs at least as densely as the per-array homogeneous layout."""
+    iris = schedule(p).metrics()
+    homog = homogeneous_layout(p).metrics()
+    assert iris.c_max <= homog.c_max
+
+
+@given(problems())
+@settings(max_examples=100, deadline=None)
+def test_iris_never_worse_than_naive(p):
+    naive = naive_layout(p).metrics()
+    iris = schedule(p).metrics()
+    assert iris.c_max <= naive.c_max
+    assert iris.efficiency >= naive.efficiency - 1e-12
+
+
+@given(problems())
+@settings(max_examples=75, deadline=None)
+def test_interval_mode_matches_cycle_mode(p):
+    """Event-driven tau-jumping must stay close to the exact scheduler."""
+    cyc = schedule(p, mode="cycle")
+    itv = schedule(p, mode="interval")
+    itv.validate()
+    mc, mi = cyc.metrics(), itv.metrics()
+    # identical density up to one partial-cycle event per array
+    assert abs(mi.c_max - mc.c_max) <= len(p.arrays) + 1
+    assert mi.efficiency >= mc.efficiency * 0.9 - 1e-9
+
+
+@given(problems())
+@settings(max_examples=75, deadline=None)
+def test_fill_residual_never_hurts_cmax(p):
+    """Beyond-paper refinement: offering LRM leftovers to lower groups."""
+    faithful = schedule(p, fill_residual=False).metrics()
+    filled = schedule(p, fill_residual=True).metrics()
+    assert filled.c_max <= faithful.c_max
+
+
+@given(problems())
+@settings(max_examples=75, deadline=None)
+def test_fifo_depth_bounded_by_peak_rate(p):
+    """Backlog cannot exceed (peak elems/cycle - 1) * C_max."""
+    lay = schedule(p)
+    peak = lay.max_concurrent_elems()
+    c_max = lay.c_max
+    for depth, pk in zip(lay.fifo_depths(), peak):
+        assert depth <= max(0, pk - 1) * c_max
+        if pk <= 1:
+            assert depth == 0
+
+
+@given(problems())
+@settings(max_examples=50, deadline=None)
+def test_layout_cycles_view_agrees_with_intervals(p):
+    """The lazily materialized per-cycle view must re-merge to the same IR."""
+    lay = schedule(p)
+    rebuilt = Layout.from_counts(
+        p,
+        [
+            tuple((s.array, s.n_elems) for s in segs)
+            for segs in lay.cycles
+        ],
+    )
+    assert rebuilt.c_max == lay.c_max
+    assert rebuilt.metrics().row() == lay.metrics().row()
+
+
+@given(problems())
+@settings(max_examples=50, deadline=None)
+def test_element_positions_cover_all_elements(p):
+    lay = schedule(p)
+    for i, a in enumerate(p.arrays):
+        pos = lay.element_positions(i)
+        assert len(pos) == a.depth
+        assert len(set(pos)) == a.depth
+        for (t, off) in pos:
+            assert 0 <= t < lay.c_max
+            assert 0 <= off <= p.m - a.width

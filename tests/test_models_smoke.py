@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-grad +
+decode step on CPU, asserting output shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import Model
+
+B, S = 2, 32
+
+
+def _reduced_model(arch):
+    cfg = get_config(arch).reduced()
+    return Model(cfg, remat="none"), cfg
+
+
+def _batch(cfg, key):
+    kt, kl, kf = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(
+            kf, (B, cfg.encoder.n_ctx, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    model, cfg = _reduced_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux, _ = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_loss_and_grad_finite(arch):
+    model, cfg = _reduced_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert flat, "no grads produced"
+    for g in flat:
+        assert np.isfinite(np.asarray(g, dtype=np.float32)).all()
+    # loss should be near log(V) for random init
+    assert 0.1 * np.log(cfg.vocab_size) < float(loss) < 3 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    model, cfg = _reduced_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    state = model.init_decode_state(B, max_seq=64)
+    cross_kv = None
+    if cfg.encoder is not None:
+        frames = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder.n_ctx, cfg.d_model))
+        memory = jax.jit(model.encode)(params, frames)
+        cross_kv = model.precompute_cross_kv(params, memory)
+    step = jax.jit(model.decode_step)
+    tokens = jnp.zeros((B,), jnp.int32)
+    for i in range(3):
+        logits, state = step(params, state, tokens, cross_kv)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        assert (np.asarray(state["pos"]) == i + 1).all()
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "rwkv6-3b",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode must agree with the parallel forward pass.
+
+    MoE capacity is raised so no tokens drop (capacity-based dispatch
+    legitimately differs between batch sizes otherwise) and the check runs
+    in float32 — in bf16 the two mathematically identical paths diverge
+    measurably after ~16 layers (verified: f32 agreement is ~3e-5)."""
+    _, cfg = _reduced_model(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    model = Model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 8), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    logits_par, _, _ = jax.jit(model.forward)(params, batch)
+    state = model.init_decode_state(B, max_seq=16)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for i in range(8):
+        lg, state = step(params, state, toks[:, i], None)
+        outs.append(lg)
+    logits_seq = jnp.stack(outs, axis=1)
+    # MoE models: top-k routing is discrete, so ~1e-6 fusion-order noise
+    # can flip near-tie expert choices and bump a few logits by ~4e-3;
+    # dense/ssm models agree to ~3e-5 (isolated mixers agree to ~2e-6).
+    atol = 2e-2 if cfg.moe is not None else 1e-3
+    np.testing.assert_allclose(
+        np.asarray(logits_seq, np.float32),
+        np.asarray(logits_par, np.float32), rtol=1e-3, atol=atol)
+
+
+def test_moe_capacity_dispatch_matches_reference():
+    """Scatter-dispatch MoE == dense oracle when capacity is ample."""
+    from repro.models.moe import apply_moe, apply_moe_reference, init_moe
+    cfg = get_config("arctic-480b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y, aux = apply_moe(cfg, p, x)
+    y_ref = apply_moe_reference(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-2, atol=2e-2)
+    assert np.isfinite(float(aux))
+
+
+def test_param_counts_match_reduced_tree():
+    """ModelConfig.param_count ~ actual init tree size (reduced configs)."""
+    for arch in ("smollm-135m", "moonshot-v1-16b-a3b"):
+        model, cfg = _reduced_model(arch)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        approx = cfg.param_count()
+        assert 0.5 * approx < actual < 2.0 * approx, (arch, actual, approx)

@@ -1,0 +1,88 @@
+"""End-to-end packed serving: quantize -> Iris layout -> packed decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.packing import pack_bundle, layer_bundle_spec
+from repro.models.model import Model
+from repro.models.quantized import (
+    bytes_per_token_report,
+    packed_decode_step,
+    quantizable,
+    quantize_params,
+)
+from repro.quant import QuantSpec
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("smollm-135m").reduced(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=128, head_dim=32)
+    model = Model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_quantizable_families():
+    assert quantizable(get_config("smollm-135m").reduced())
+    assert quantizable(get_config("mistral-large-123b").reduced())
+    assert not quantizable(get_config("rwkv6-3b").reduced())
+    assert not quantizable(get_config("whisper-medium").reduced())
+
+
+def test_packed_decode_matches_dense(dense_setup):
+    """int8 packed decode tracks the bf16 dense path closely."""
+    cfg, model, params = dense_setup
+    pp = quantize_params(cfg, params, QuantSpec(bits=8, group_size=32))
+    b = 2
+    state = model.init_decode_state(b, max_seq=16)
+    toks = jnp.array([3, 77], jnp.int32)
+    dense_logits, dense_state = jax.jit(model.decode_step)(
+        params, state, toks, None)
+    packed_logits, packed_state = packed_decode_step(
+        cfg, pp, state, toks, interpret=True)
+    # rank agreement on the top prediction + bounded numeric gap
+    d = np.asarray(dense_logits, np.float32)
+    q = np.asarray(packed_logits, np.float32)
+    assert np.abs(q - d).max() < 0.25 * np.abs(d).max() + 0.5
+    assert (np.argmax(q, -1) == np.argmax(d, -1)).mean() >= 0.5
+    assert (np.asarray(packed_state["pos"]) == 1).all()
+
+
+def test_multi_step_packed_generation(dense_setup):
+    cfg, model, params = dense_setup
+    pp = quantize_params(cfg, params, QuantSpec(bits=8, group_size=32))
+    state = model.init_decode_state(2, max_seq=16)
+    toks = jnp.array([5, 9], jnp.int32)
+    for i in range(4):
+        logits, state = packed_decode_step(cfg, pp, state, toks,
+                                           interpret=True)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert (np.asarray(state["pos"]) == 4).all()
+
+
+def test_bytes_report_orders(dense_setup):
+    cfg, _, params = dense_setup
+    pp4 = quantize_params(cfg, params, QuantSpec(bits=4, group_size=32))
+    r = bytes_per_token_report(cfg, pp4)
+    # packed < padded-int < bf16 weight traffic per decode token
+    assert r["packed_MiB"] < r["bf16_MiB"]
+    assert r["padded_int_MiB"] <= r["bf16_MiB"]
+
+
+def test_bundle_layout_for_quantized_layer(dense_setup):
+    """The Iris layout over the quantized bundle is valid and dense."""
+    cfg, _, _ = dense_setup
+    spec = QuantSpec(bits=3, group_size=32)
+    bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, spec)
+    pb = pack_bundle(bundle, m=512)
+    pb.layout.validate()
+    assert pb.metrics_iris["B_eff"] > 0.95
+    # dataflow due dates: attention norm precedes mlp down-projection
+    comp = pb.layout.metrics().completion
+    assert comp["attn_norm"] <= comp["w_down"]
