@@ -10,6 +10,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
   bench_packed_matmul    — dequant-on-load matmul kernel vs oracle
   bench_model_packing    — Iris parameter streaming per architecture
   bench_scheduler_scale  — Iris runtime scaling (interval mode)
+  bench_scheduler_throughput — unified engine: interval vs cycle on a
+                           1M-cycle problem (bit-identical), layout-cache
+                           hit vs miss, schedule_many batch dedupe
 """
 from __future__ import annotations
 
@@ -246,6 +249,65 @@ def bench_scheduler_scale() -> None:
              f"B_eff={lay.metrics().efficiency:.4f}")
 
 
+def bench_scheduler_throughput() -> None:
+    """Unified-engine throughput: the ISSUE-1 acceptance benchmark.
+
+    (a) a 1M-cycle lane-capped problem (paper Table 6's delta/W knob at
+        model-packing scale): event-driven interval mode vs per-cycle
+        replay, asserting the layouts are bit-identical;
+    (b) an LRM-contended multi-release problem: layout-cache miss vs hit
+        (the serving hot path — repeated identical problems);
+    (c) schedule_many over a uniform 32-layer stack: one scheduler run,
+        31 rebinds.
+    """
+    from repro.core.iris import LayoutCache, schedule, schedule_many
+    from repro.core.task import make_problem
+
+    # (a) every task runs at its (capped) full rate -> long constant runs
+    specs = [(f"a{i}", 8, 7_900_000 + 60_000 * i, 25_000 * i)
+             for i in range(8)]
+    p_big = make_problem(512, specs, max_lanes=8)
+    t0 = time.perf_counter()
+    lay_i = schedule(p_big, mode="interval")
+    t_interval = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lay_c = schedule(p_big, mode="cycle")
+    t_cycle = time.perf_counter() - t0
+    assert lay_c.count_intervals == lay_i.count_intervals
+    _row("scheduler_throughput/1M_interval", t_interval * 1e6,
+         f"cycle_us={t_cycle*1e6:.0f};speedup={t_cycle/t_interval:.0f}x;"
+         f"C_max={lay_i.c_max};intervals={len(lay_i.intervals())};"
+         f"identical=True")
+
+    # (b) contended problem: the expensive case the cache absorbs
+    specs = [("a", 7, 15_000_000, 0), ("b", 9, 11_000_000, 120_000),
+             ("c", 12, 9_000_000, 300_000), ("d", 17, 6_000_000, 500_000),
+             ("e", 23, 4_000_000, 700_000)]
+    p_hot = make_problem(512, specs)
+    cache = LayoutCache()
+    t0 = time.perf_counter()
+    schedule(p_hot, mode="interval", cache=cache)
+    t_miss = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    schedule(p_hot, mode="interval", cache=cache)
+    t_hit = time.perf_counter() - t0
+    _row("scheduler_throughput/cache_hit", t_hit * 1e6,
+         f"miss_us={t_miss*1e6:.0f};speedup={t_miss/t_hit:.0f}x;"
+         f"C_max={cache.lookup(p_hot).c_max}")
+
+    # (c) uniform stack: every layer is the same scheduling instance
+    layers = [make_problem(
+        512, [(f"t{j}", 4 + 2 * j, 200_000, 5_000 * j) for j in range(6)])
+        for _ in range(32)]
+    cache = LayoutCache()
+    t0 = time.perf_counter()
+    outs = schedule_many(layers, cache=cache)
+    t_batch = time.perf_counter() - t0
+    _row("scheduler_throughput/batch_32_layers", t_batch * 1e6,
+         f"runs={cache.misses};hits={cache.hits};"
+         f"C_max={outs[0].c_max}")
+
+
 ALL = [
     bench_example_layout,
     bench_inv_helmholtz,
@@ -257,6 +319,7 @@ ALL = [
     bench_ssd_scan_kernel,
     bench_model_packing,
     bench_scheduler_scale,
+    bench_scheduler_throughput,
 ]
 
 

@@ -1,22 +1,32 @@
 """Design-space exploration helpers (paper §1: Iris enables rapid DSE
-over custom-precision widths and the delta/W resource/efficiency knob)."""
+over custom-precision widths and the delta/W resource/efficiency knob).
+
+Sweeps run through :func:`repro.core.iris.schedule_many` against a shared
+:class:`repro.core.iris.LayoutCache` (the process-wide ``DEFAULT_CACHE``
+unless overridden), so re-running a sweep — or running overlapping sweeps
+— never re-solves a scheduling instance it has already seen.  Cached and
+uncached sweeps return identical rows because the unified engine is
+deterministic and bit-exact in every mode (tested in tests/test_dse.py).
+"""
 from __future__ import annotations
 
 from typing import Callable, Sequence
 
 from .baselines import homogeneous_layout
-from .iris import schedule
+from .iris import DEFAULT_CACHE, LayoutCache, schedule_many
 from .task import LayoutProblem, make_problem
 
 
 def sweep_widths(problem_fn: Callable[..., LayoutProblem],
-                 width_pairs: Sequence[tuple[int, int]]) -> list[dict]:
+                 width_pairs: Sequence[tuple[int, int]],
+                 cache: LayoutCache | None = DEFAULT_CACHE) -> list[dict]:
     """Paper Table 7: metrics across custom element widths."""
+    problems = [problem_fn(*widths) for widths in width_pairs]
+    layouts = schedule_many(problems, cache=cache)
     out = []
-    for widths in width_pairs:
-        p = problem_fn(*widths)
+    for widths, p, lay in zip(width_pairs, problems, layouts):
         nm = homogeneous_layout(p).metrics()
-        im = schedule(p).metrics()
+        im = lay.metrics()
         out.append({
             "widths": widths,
             "naive_eff": nm.efficiency,
@@ -32,16 +42,21 @@ def sweep_widths(problem_fn: Callable[..., LayoutProblem],
 
 
 def sweep_max_lanes(problem: LayoutProblem,
-                    lane_caps: Sequence[int | None]) -> list[dict]:
+                    lane_caps: Sequence[int | None],
+                    cache: LayoutCache | None = DEFAULT_CACHE) -> list[dict]:
     """Paper Table 6: the delta/W knob trades efficiency for decode
     resources (FIFO write ports)."""
-    out = []
-    for cap in lane_caps:
-        p = make_problem(
+    problems = [
+        make_problem(
             problem.m,
             [(a.name, a.width, a.depth, a.due) for a in problem.arrays],
             max_lanes=cap)
-        m = schedule(p).metrics()
+        for cap in lane_caps
+    ]
+    layouts = schedule_many(problems, cache=cache)
+    out = []
+    for cap, lay in zip(lane_caps, layouts):
+        m = lay.metrics()
         out.append({
             "max_lanes": cap,
             "eff": m.efficiency,

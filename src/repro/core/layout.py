@@ -89,11 +89,13 @@ class Layout:
         bit offsets are packed LSB-first in slot order.
         """
         self.problem = problem
-        self.count_intervals: list[tuple[int, Counts]] = [
+        # immutable so layouts can be shared safely (e.g. cache hits
+        # handing out the same object to many callers)
+        self.count_intervals: tuple[tuple[int, Counts], ...] = tuple(
             (int(n), tuple((int(a), int(e)) for a, e in counts if e > 0))
             for n, counts in count_intervals
             if n > 0
-        ]
+        )
         self._intervals: list[Interval] | None = None
         self._cycles: list[list[Segment]] | None = None
         self._build_intervals()
@@ -126,6 +128,22 @@ class Layout:
                              reverse: bool = False) -> "Layout":
         seq = list(reversed(intervals)) if reverse else list(intervals)
         return Layout(problem, seq)
+
+    def rebind(self, problem: LayoutProblem) -> "Layout":
+        """Re-attach this layout to ``problem`` without re-scheduling.
+
+        ``problem`` must pose the same scheduling instance (same
+        ``canonical_signature``) — typically it differs only in array
+        names.  O(intervals): the count runs are reused verbatim; this is
+        what makes a :class:`repro.core.iris.LayoutCache` hit cheap.
+        """
+        if problem == self.problem:
+            return self
+        if problem.canonical_signature() != self.problem.canonical_signature():
+            raise ValueError(
+                "rebind target is a different scheduling instance"
+            )
+        return Layout(problem, self.count_intervals)
 
     def _build_intervals(self) -> None:
         prob = self.problem

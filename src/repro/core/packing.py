@@ -28,7 +28,7 @@ from repro.quant.qtypes import QuantSpec
 
 from .baselines import hls_padded_layout, homogeneous_layout
 from .codegen import decode_plan, pack_arrays
-from .iris import schedule
+from .iris import DEFAULT_CACHE, LayoutCache, schedule
 from .layout import Layout
 from .task import ArraySpec, LayoutProblem
 
@@ -132,10 +132,17 @@ def bundle_problem(bundle: list[BundleTensor], m: int = 4096,
 
 def pack_bundle(bundle: list[BundleTensor], m: int = 4096,
                 data: dict[str, np.ndarray] | None = None,
-                mode: str = "auto") -> PackedBundle:
-    """Schedule (and optionally pack) one layer bundle."""
+                mode: str = "auto",
+                cache: LayoutCache | None = DEFAULT_CACHE) -> PackedBundle:
+    """Schedule (and optionally pack) one layer bundle.
+
+    Layer bundles of uniform decoder stacks are identical scheduling
+    instances, so the shared ``cache`` makes every layer after the first
+    (and every repeated serving request) a cache hit — the scheduler
+    never re-runs.
+    """
     prob = bundle_problem(bundle, m=m)
-    lay = schedule(prob, mode=mode)
+    lay = schedule(prob, mode=mode, cache=cache)
     lay.validate()
     buf = None
     if data is not None:
@@ -177,7 +184,8 @@ def _per_tensor_cycles(width: int, n_elems: int, m: int) -> int:
     return -(-n_elems // lanes)
 
 
-def serving_stream_report(cfg, qspec: QuantSpec, m: int = 4096) -> dict:
+def serving_stream_report(cfg, qspec: QuantSpec, m: int = 4096,
+                          cache: LayoutCache | None = DEFAULT_CACHE) -> dict:
     """Bytes-per-layer comparison for decode-step weight streaming.
 
     Baselines are computed at *element* granularity, matching real
@@ -195,7 +203,7 @@ def serving_stream_report(cfg, qspec: QuantSpec, m: int = 4096) -> dict:
     """
     bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
                                cfg.n_kv_heads, cfg.head_dim, qspec)
-    pb = pack_bundle(bundle, m=m)
+    pb = pack_bundle(bundle, m=m, cache=cache)
     p_tot_bits = sum(b.width_bits * b.n_elems for b in bundle)
     n_elems = sum(b.n_elems for b in bundle)
     hom_cycles = sum(

@@ -91,6 +91,21 @@ class LayoutProblem:
         """r_j = d_max - d_j (paper §4: due-date -> release-time conversion)."""
         return self.d_max - a.due
 
+    def canonical_signature(self) -> tuple:
+        """Name-independent content signature of the problem.
+
+        Two problems with the same signature are the *same scheduling
+        instance*: the scheduler's output depends only on the bus width and
+        the ordered (width, depth, due, max_lanes) tuples — array names are
+        labels.  Input order is part of the signature because the scheduler
+        breaks ties by it.  This is the content-address used by
+        :class:`repro.core.iris.LayoutCache`.
+        """
+        return (
+            self.m,
+            tuple((a.width, a.depth, a.due, a.max_lanes) for a in self.arrays),
+        )
+
     # ---- (de)serialization: the paper's prototype reads a JSON file ----
     def to_json(self) -> str:
         return json.dumps(

@@ -4,8 +4,10 @@
         --reduced --requests 6 --batch-size 2 --max-new 8 [--packed --bits 8]
 
 `--packed` serves through the quantized dequant-on-load path
-(models/quantized.py) for dense-family archs and prints the weight-stream
-bytes-per-token comparison.
+(models/quantized.py) for dense-family archs, prints the weight-stream
+bytes-per-token comparison, and plans the per-layer Iris stream layouts
+through the shared layout cache (one scheduler run for the whole uniform
+stack; repeated requests with the same shapes never re-run the scheduler).
 """
 from __future__ import annotations
 
@@ -50,13 +52,30 @@ def main() -> None:
 
         if not quantizable(cfg):
             raise SystemExit(f"{cfg.name}: packed path covers dense archs")
-        pp = quantize_params(cfg, params,
-                             QuantSpec(bits=args.bits, group_size=32))
+        qspec = QuantSpec(bits=args.bits, group_size=32)
+        pp = quantize_params(cfg, params, qspec)
         rep = bytes_per_token_report(cfg, pp)
         print(f"weight stream/token: packed={rep['packed_MiB']:.2f} MiB "
               f"padded-int={rep['padded_int_MiB']:.2f} "
               f"bf16={rep['bf16_MiB']:.2f} "
               f"({rep['bf16_MiB']/rep['packed_MiB']:.2f}x reduction)")
+
+        # plan the per-layer Iris stream layouts through the shared layout
+        # cache: every layer of a uniform stack is the same scheduling
+        # instance, so the scheduler runs once and each further layer —
+        # and each repeated request with the same shapes — is a cache hit
+        from repro.core.iris import DEFAULT_CACHE, schedule_many
+        from repro.core.packing import bundle_problem, layer_bundle_spec
+
+        bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim, qspec)
+        probs = [bundle_problem(bundle) for _ in range(cfg.n_layers)]
+        layouts = schedule_many(probs, cache=DEFAULT_CACHE)
+        st = DEFAULT_CACHE.stats
+        print(f"iris stream plan: {cfg.n_layers} layers, "
+              f"C_max={layouts[0].c_max}/layer, "
+              f"B_eff={layouts[0].metrics().efficiency:.4f}, "
+              f"scheduler runs={st['misses']} cache hits={st['hits']}")
 
     loop = ServeLoop(model, params, batch_size=args.batch_size,
                      max_seq=args.max_seq)

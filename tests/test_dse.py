@@ -1,0 +1,59 @@
+"""DSE sweep coverage: monotone lane-cap behavior + cache transparency."""
+from repro.core.dse import sweep_max_lanes, sweep_widths
+from repro.core.iris import LayoutCache
+from repro.core.task import INV_HELMHOLTZ, matmul_problem
+
+LANE_CAPS = [1, 2, 3, 4, None]
+
+
+def test_sweep_max_lanes_monotone_efficiency():
+    """Paper Table 6: widening the delta/W cap can only help density.
+
+    Efficiency is nondecreasing and C_max nonincreasing in the lane cap;
+    the FIFO cost (decode resources) is what the knob trades away.
+    """
+    rows = sweep_max_lanes(INV_HELMHOLTZ, LANE_CAPS, cache=LayoutCache())
+    assert [r["max_lanes"] for r in rows] == LANE_CAPS
+    for lo, hi in zip(rows, rows[1:]):
+        assert hi["eff"] >= lo["eff"] - 1e-12
+        assert hi["cmax"] <= lo["cmax"]
+        assert hi["lmax"] <= lo["lmax"]
+    # the uncapped column reproduces the paper's Helmholtz numbers
+    assert rows[-1]["cmax"] == 696
+    assert rows[0]["fifo"] == 0          # one lane -> no staging at all
+
+
+def test_sweep_max_lanes_cached_equals_uncached():
+    cached = sweep_max_lanes(INV_HELMHOLTZ, LANE_CAPS, cache=LayoutCache())
+    uncached = sweep_max_lanes(INV_HELMHOLTZ, LANE_CAPS, cache=None)
+    assert cached == uncached
+    # a second pass over a warm cache must also be identical
+    cache = LayoutCache()
+    first = sweep_max_lanes(INV_HELMHOLTZ, LANE_CAPS, cache=cache)
+    warm = sweep_max_lanes(INV_HELMHOLTZ, LANE_CAPS, cache=cache)
+    assert warm == first
+    assert cache.hits >= len(LANE_CAPS)
+
+
+def test_sweep_max_lanes_reuses_cache_across_sweeps():
+    cache = LayoutCache()
+    sweep_max_lanes(INV_HELMHOLTZ, LANE_CAPS, cache=cache)
+    runs_first = cache.misses
+    sweep_max_lanes(INV_HELMHOLTZ, [2, 4, None], cache=cache)
+    assert cache.misses == runs_first    # overlapping caps: zero new runs
+
+
+def test_sweep_widths_iris_beats_naive():
+    pairs = [(64, 64), (33, 31), (30, 19)]
+    rows = sweep_widths(matmul_problem, pairs, cache=LayoutCache())
+    assert [r["widths"] for r in rows] == pairs
+    for r in rows:
+        assert r["iris_eff"] >= r["naive_eff"] - 1e-12
+        assert r["iris_cmax"] <= r["naive_cmax"]
+        assert 0 < r["iris_eff"] <= 1
+
+
+def test_sweep_widths_cached_equals_uncached():
+    pairs = [(64, 64), (33, 31)]
+    assert sweep_widths(matmul_problem, pairs, cache=LayoutCache()) \
+        == sweep_widths(matmul_problem, pairs, cache=None)

@@ -1,5 +1,12 @@
 """Property tests for the model-integration packing layer and the
-beyond-paper scheduler refinement."""
+beyond-paper scheduler refinement.
+
+Skipped gracefully where hypothesis is not installed.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings

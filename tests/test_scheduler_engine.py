@@ -1,0 +1,199 @@
+"""Unified event-driven engine: bit-identity, layout cache, batch API.
+
+These tests are hypothesis-free on purpose — they are the container-safe
+half of the engine's property coverage (tests/test_iris_properties.py
+carries the hypothesis versions) and must run wherever pytest runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.iris import (
+    DEFAULT_CACHE,
+    LayoutCache,
+    schedule,
+    schedule_many,
+)
+from repro.core.task import (
+    ArraySpec,
+    INV_HELMHOLTZ,
+    LayoutProblem,
+    PAPER_EXAMPLE,
+    make_problem,
+)
+
+
+def _random_problem(rng) -> LayoutProblem:
+    m = int(rng.choice([8, 16, 32, 64]))
+    n = int(rng.integers(1, 8))
+    arrays = tuple(
+        ArraySpec(
+            f"a{i}",
+            width=int(rng.integers(1, min(13, m) + 1)),
+            depth=int(rng.integers(1, 120)),
+            due=int(rng.integers(0, 41)),
+            max_lanes=int(rng.integers(1, 9)) if rng.random() < 0.3 else None,
+        )
+        for i in range(n)
+    )
+    return LayoutProblem(m=m, arrays=arrays)
+
+
+# ----------------------------------------------------------------------
+# bit-identity: interval mode == cycle-mode replay
+# ----------------------------------------------------------------------
+def test_interval_bit_identical_to_cycle_randomized():
+    rng = np.random.default_rng(0)
+    for _ in range(150):
+        p = _random_problem(rng)
+        for fill_residual in (False, True):
+            cyc = schedule(p, mode="cycle", fill_residual=fill_residual)
+            itv = schedule(p, mode="interval", fill_residual=fill_residual)
+            itv.validate()
+            assert itv.count_intervals == cyc.count_intervals, (
+                p, fill_residual)
+
+
+def test_interval_bit_identical_at_depth():
+    """Deep problems exercise the jump bounds and the periodic
+    fast-forward; identity must hold there too, not just at toy sizes."""
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        specs = [(f"a{i}", int(rng.integers(2, 17)),
+                  int(rng.integers(5000, 30000)),
+                  int(rng.integers(0, 300)))
+                 for i in range(int(rng.integers(2, 9)))]
+        p = make_problem(128, specs)
+        cyc = schedule(p, mode="cycle")
+        itv = schedule(p, mode="interval")
+        assert itv.count_intervals == cyc.count_intervals, p
+
+
+def test_interval_bit_identical_lane_capped():
+    """Full-rate (delta/W-capped) problems take the lockstep jump path."""
+    specs = [(f"a{i}", 8, 7_900 + 60 * i, 25 * i) for i in range(8)]
+    p = make_problem(512, specs, max_lanes=8)
+    cyc = schedule(p, mode="cycle")
+    itv = schedule(p, mode="interval")
+    assert itv.count_intervals == cyc.count_intervals
+    itv.validate()
+
+
+def test_paper_example_unchanged_by_engine():
+    """The unified engine must reproduce the paper's §4 numbers."""
+    for mode in ("cycle", "interval"):
+        m = schedule(PAPER_EXAMPLE, mode=mode).metrics()
+        assert (m.c_max, m.l_max) == (9, 3)
+        assert abs(m.efficiency - 0.958) < 1e-3
+
+
+# ----------------------------------------------------------------------
+# layout cache
+# ----------------------------------------------------------------------
+def test_cache_hit_returns_same_layout_object():
+    cache = LayoutCache()
+    lay1 = schedule(PAPER_EXAMPLE, cache=cache)
+    lay2 = schedule(PAPER_EXAMPLE, cache=cache)
+    assert lay2 is lay1
+    assert cache.stats == {"hits": 1, "misses": 1, "size": 1,
+                           "maxsize": 256}
+
+
+def test_cache_is_name_independent_and_rebinds():
+    cache = LayoutCache()
+    p1 = make_problem(8, [("x", 2, 5, 2), ("y", 3, 5, 6)])
+    p2 = make_problem(8, [("u", 2, 5, 2), ("v", 3, 5, 6)])
+    lay1 = schedule(p1, cache=cache)
+    lay2 = schedule(p2, cache=cache)
+    assert cache.misses == 1 and cache.hits == 1
+    assert lay2.count_intervals == lay1.count_intervals
+    # the rebound layout speaks the caller's names
+    assert set(lay2.metrics().lateness) == {"u", "v"}
+    assert lay2.count_intervals == schedule(p2).count_intervals
+
+
+def test_cache_keys_on_fill_residual():
+    cache = LayoutCache()
+    schedule(PAPER_EXAMPLE, cache=cache, fill_residual=False)
+    schedule(PAPER_EXAMPLE, cache=cache, fill_residual=True)
+    assert cache.misses == 2 and cache.hits == 0
+
+
+def test_cache_mode_not_in_key():
+    """Bit-identity makes a cycle-mode layout answer interval requests."""
+    cache = LayoutCache()
+    a = schedule(PAPER_EXAMPLE, mode="cycle", cache=cache)
+    b = schedule(PAPER_EXAMPLE, mode="interval", cache=cache)
+    assert b is a and cache.hits == 1
+
+
+def test_cache_lru_eviction():
+    cache = LayoutCache(maxsize=2)
+    p = [make_problem(8, [("a", 2, d, 0)]) for d in (3, 4, 5)]
+    schedule(p[0], cache=cache)
+    schedule(p[1], cache=cache)
+    schedule(p[0], cache=cache)        # refresh p0 -> p1 becomes LRU
+    schedule(p[2], cache=cache)        # evicts p1
+    assert len(cache) == 2
+    assert cache.lookup(p[1]) is None
+    assert cache.lookup(p[0]) is not None
+
+
+def test_cache_rejects_bad_maxsize():
+    with pytest.raises(ValueError):
+        LayoutCache(maxsize=0)
+
+
+def test_cached_layout_matches_fresh_schedule():
+    rng = np.random.default_rng(3)
+    cache = LayoutCache()
+    for _ in range(25):
+        p = _random_problem(rng)
+        fresh = schedule(p)
+        cached_first = schedule(p, cache=cache)
+        cached_again = schedule(p, cache=cache)
+        assert fresh.count_intervals == cached_first.count_intervals
+        assert cached_again.count_intervals == fresh.count_intervals
+
+
+def test_canonical_signature_orders_and_ignores_names():
+    p1 = make_problem(8, [("x", 2, 5, 2), ("y", 3, 5, 6)])
+    p2 = make_problem(8, [("a", 2, 5, 2), ("b", 3, 5, 6)])
+    p3 = make_problem(8, [("y", 3, 5, 6), ("x", 2, 5, 2)])  # reordered
+    assert p1.canonical_signature() == p2.canonical_signature()
+    assert p1.canonical_signature() != p3.canonical_signature()
+
+
+def test_rebind_rejects_different_instance():
+    lay = schedule(PAPER_EXAMPLE)
+    with pytest.raises(ValueError):
+        lay.rebind(INV_HELMHOLTZ)
+
+
+# ----------------------------------------------------------------------
+# batch API
+# ----------------------------------------------------------------------
+def test_schedule_many_dedupes_identical_instances():
+    layers = [make_problem(64, [("w", 4, 500, 10), ("s", 16, 120, 10)])
+              for _ in range(6)]
+    cache = LayoutCache()
+    outs = schedule_many(layers, cache=cache)
+    assert len(outs) == 6
+    assert cache.misses == 1 and cache.hits == 5
+    base = schedule(layers[0])
+    for lay in outs:
+        assert lay.count_intervals == base.count_intervals
+
+
+def test_schedule_many_preserves_order_and_handles_mixed_batches():
+    p_a = make_problem(8, [("a", 2, 5, 2)])
+    p_b = make_problem(8, [("b", 3, 7, 4)])
+    outs = schedule_many([p_a, p_b, p_a], cache=None)
+    assert outs[0].count_intervals == outs[2].count_intervals
+    assert outs[0].problem is p_a and outs[1].problem is p_b
+    assert outs[1].count_intervals == schedule(p_b).count_intervals
+
+
+def test_default_cache_is_shared_and_bounded():
+    assert DEFAULT_CACHE.maxsize == 512
+    lay = schedule_many([PAPER_EXAMPLE])[0]
+    assert DEFAULT_CACHE.lookup(PAPER_EXAMPLE) is lay
