@@ -1,5 +1,6 @@
 """Aggregate artifacts/dryrun/*.json into the EXPERIMENTS.md roofline
-tables.
+tables, plus the layout-strategy comparison table driven by the
+repro.api registry.
 
 Usage:  PYTHONPATH=src python -m benchmarks.roofline_report [--dir artifacts/dryrun]
 Prints markdown; EXPERIMENTS.md embeds the output.
@@ -84,9 +85,36 @@ def summary(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def layout_strategy_table() -> str:
+    """Paper-problem metrics for every registered layout strategy.
+
+    Iterates the :mod:`repro.api` strategy registry, so a newly
+    registered strategy shows up in the report without edits here.
+    """
+    from repro import api
+
+    probs = (
+        ("paper_example", api.PAPER_EXAMPLE),
+        ("inv_helmholtz", api.INV_HELMHOLTZ),
+        ("matmul_33x31", api.matmul_problem(33, 31)),
+    )
+    out = [
+        "| problem | strategy | C_max | L_max | B_eff | FIFO bits |",
+        "|---|---|---|---|---|---|",
+    ]
+    for pname, prob in probs:
+        for sname, m in api.compare(prob).items():
+            out.append(
+                f"| {pname} | {sname} | {m.c_max} | {m.l_max} | "
+                f"{m.efficiency:.3f} | {sum(m.fifo_depth.values())} |")
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--no-layouts", action="store_true",
+                    help="skip the layout-strategy table")
     args = ap.parse_args()
     rows = load(args.dir)
     print("## Roofline — single pod (16x16 = 256 chips)\n")
@@ -95,6 +123,9 @@ def main() -> None:
     print(table(rows, "pod2x16x16"))
     print("\n## Summary\n")
     print(summary(rows))
+    if not args.no_layouts:
+        print("\n## Layout strategies (repro.api registry)\n")
+        print(layout_strategy_table())
 
 
 if __name__ == "__main__":

@@ -35,27 +35,29 @@ def _row(name: str, us: float, derived: str) -> None:
 
 
 # ----------------------------------------------------------------------
+# Paper tables/figures — everything below drives the repro.api façade;
+# the strategy loop iterates the registry instead of importing one
+# function per layout family.  ``cache=None`` keeps the timings honest
+# (a warm DEFAULT_CACHE would turn re-schedules into lookups).
+# ----------------------------------------------------------------------
 def bench_example_layout() -> None:
-    from repro.core.baselines import homogeneous_layout, naive_layout
-    from repro.core.iris import schedule
-    from repro.core.task import PAPER_EXAMPLE
+    from repro import api
 
-    for label, fn in (("naive", naive_layout),
-                      ("homogeneous", homogeneous_layout),
-                      ("iris", schedule)):
-        us = _timeit(lambda fn=fn: fn(PAPER_EXAMPLE))
-        m = fn(PAPER_EXAMPLE).metrics()
+    for label in api.strategies():
+        us = _timeit(lambda label=label:
+                     api.plan(api.PAPER_EXAMPLE, label, cache=None).layout)
+        m = api.plan(api.PAPER_EXAMPLE, label, cache=None).metrics
         _row(f"example/{label}", us,
              f"C_max={m.c_max};L_max={m.l_max};B_eff={m.efficiency:.3f}")
 
 
 def bench_inv_helmholtz() -> None:
-    from repro.core.baselines import homogeneous_layout
-    from repro.core.iris import schedule
-    from repro.core.task import INV_HELMHOLTZ, make_problem
+    from repro import api
+    from repro.core import INV_HELMHOLTZ, make_problem
 
-    us = _timeit(lambda: homogeneous_layout(INV_HELMHOLTZ))
-    m = homogeneous_layout(INV_HELMHOLTZ).metrics()
+    m = api.plan(INV_HELMHOLTZ, "homogeneous").metrics
+    us = _timeit(lambda:
+                 api.plan(INV_HELMHOLTZ, "homogeneous", cache=None).layout)
     fifo = sum(m.fifo_depth.values())
     _row("helmholtz/naive", us,
          f"C_max={m.c_max};L_max={m.l_max};B_eff={m.efficiency:.3f};"
@@ -63,8 +65,8 @@ def bench_inv_helmholtz() -> None:
     for dw in (4, 3, 2, 1):
         p = make_problem(256, [(a.name, a.width, a.depth, a.due)
                                for a in INV_HELMHOLTZ.arrays], max_lanes=dw)
-        us = _timeit(lambda p=p: schedule(p))
-        m = schedule(p).metrics()
+        us = _timeit(lambda p=p: api.plan(p, cache=None).layout)
+        m = api.plan(p, cache=None).metrics
         fifo = sum(m.fifo_depth.values())
         _row(f"helmholtz/iris_dw{dw}", us,
              f"C_max={m.c_max};L_max={m.l_max};B_eff={m.efficiency:.3f};"
@@ -72,15 +74,15 @@ def bench_inv_helmholtz() -> None:
 
 
 def bench_matmul_widths() -> None:
-    from repro.core.baselines import homogeneous_layout
-    from repro.core.iris import schedule
-    from repro.core.task import matmul_problem
+    from repro import api
+    from repro.core import matmul_problem
 
     for wa, wb in ((64, 64), (33, 31), (30, 19)):
         p = matmul_problem(wa, wb)
-        for label, fn in (("naive", homogeneous_layout), ("iris", schedule)):
-            us = _timeit(lambda fn=fn, p=p: fn(p))
-            m = fn(p).metrics()
+        for label, strat in (("naive", "homogeneous"), ("iris", "iris")):
+            us = _timeit(lambda p=p, s=strat:
+                         api.plan(p, s, cache=None).layout)
+            m = api.plan(p, strat, cache=None).metrics
             fifo = sum(m.fifo_depth.values())
             _row(f"matmul_w{wa}x{wb}/{label}", us,
                  f"C_max={m.c_max};L_max={m.l_max};"
@@ -89,54 +91,45 @@ def bench_matmul_widths() -> None:
 
 def bench_decode_module() -> None:
     """Listing 2 analogue: decode units, staging and ports per layout."""
-    from repro.core.baselines import homogeneous_layout
-    from repro.core.codegen import decode_plan, emit_c_decode
-    from repro.core.iris import schedule
-    from repro.core.task import PAPER_EXAMPLE, matmul_problem
+    from repro import api
+    from repro.core import PAPER_EXAMPLE, decode_plan, matmul_problem
 
     for label, prob in (("example", PAPER_EXAMPLE),
                         ("matmul_33x31", matmul_problem(33, 31))):
-        for kind, fn in (("iris", schedule), ("naive", homogeneous_layout)):
-            lay = fn(prob)
-            us = _timeit(lambda lay=lay: decode_plan(lay))
-            plan = decode_plan(lay)
-            c_lines = len(emit_c_decode(lay).splitlines())
+        for kind, strat in (("iris", "iris"), ("naive", "homogeneous")):
+            pl = api.plan(prob, strat)
+            us = _timeit(lambda lay=pl.layout: decode_plan(lay))
+            c_lines = len(pl.emit(target="c").splitlines())
             _row(f"decode_module/{label}/{kind}", us,
-                 f"units={plan.n_units};"
-                 f"fifo={sum(plan.fifo_depths.values())};"
-                 f"ports={sum(plan.write_ports.values())};"
+                 f"units={pl.decode_plan.n_units};"
+                 f"fifo={sum(pl.decode_plan.fifo_depths.values())};"
+                 f"ports={sum(pl.decode_plan.write_ports.values())};"
                  f"c_lines={c_lines}")
 
 
 def bench_pack_throughput() -> None:
-    from repro.core.codegen import pack_arrays, random_codes
-    from repro.core.iris import schedule
-    from repro.core.task import make_problem
+    from repro import api
 
-    p = make_problem(256, [("w", 4, 65536, 10), ("s", 16, 4096, 10),
-                           ("n", 16, 1024, 0), ("b", 32, 512, 20)])
-    lay = schedule(p)
-    codes = random_codes(p)
-    us = _timeit(lambda: pack_arrays(lay, codes), repeats=3)
+    p = api.make_problem(256, [("w", 4, 65536, 10), ("s", 16, 4096, 10),
+                               ("n", 16, 1024, 0), ("b", 32, 512, 20)])
+    pl = api.plan(p)
+    codes = api.random_codes(p)
+    us = _timeit(lambda: pl.pack(codes), repeats=3)
     total_bytes = p.p_tot / 8
     _row("pack/host_throughput", us,
          f"MBps={total_bytes / us:.1f};bytes={int(total_bytes)}")
 
 
 def bench_decode_kernel() -> None:
-    from repro.core.codegen import pack_arrays, random_codes
-    from repro.core.iris import schedule
-    from repro.core.task import make_problem
-    from repro.kernels.ops import decode_layout
-    from repro.kernels.ref import decode_layout_ref
+    from repro import api
 
-    p = make_problem(128, [("q", 4, 8192, 4), ("s", 16, 512, 4),
-                           ("b", 32, 128, 8)])
-    lay = schedule(p)
-    buf = pack_arrays(lay, random_codes(p))
-    us_k = _timeit(lambda: decode_layout(lay, buf, interpret=True),
+    p = api.make_problem(128, [("q", 4, 8192, 4), ("s", 16, 512, 4),
+                               ("b", 32, 128, 8)])
+    pl = api.plan(p)
+    buf = pl.pack(api.random_codes(p))
+    us_k = _timeit(lambda: pl.decode(buf, backend="pallas", interpret=True),
                    repeats=2)
-    us_r = _timeit(lambda: decode_layout_ref(lay, buf), repeats=2)
+    us_r = _timeit(lambda: pl.decode(buf, backend="numpy"), repeats=2)
     _row("decode_kernel/pallas_interpret", us_k, f"oracle_us={us_r:.1f}")
 
 
@@ -233,8 +226,8 @@ def bench_model_packing() -> None:
 
 
 def bench_scheduler_scale() -> None:
-    from repro.core.iris import schedule
-    from repro.core.task import make_problem
+    # engine-level microbench: deliberately below the façade
+    from repro.core import make_problem, schedule
 
     rng = np.random.default_rng(0)
     for n_arrays, depth in ((8, 1000), (16, 10_000), (32, 100_000)):
@@ -260,8 +253,8 @@ def bench_scheduler_throughput() -> None:
     (c) schedule_many over a uniform 32-layer stack: one scheduler run,
         31 rebinds.
     """
-    from repro.core.iris import LayoutCache, schedule, schedule_many
-    from repro.core.task import make_problem
+    # engine-level microbench: deliberately below the façade
+    from repro.core import LayoutCache, make_problem, schedule, schedule_many
 
     # (a) every task runs at its (capped) full rate -> long constant runs
     specs = [(f"a{i}", 8, 7_900_000 + 60_000 * i, 25_000 * i)

@@ -1,18 +1,18 @@
 """Design-space exploration with Iris (paper §1: "rapid design-space
 exploration while tuning the width of custom-precision data types").
 
-Sweeps quantization widths for a model layer bundle and prints the
-bandwidth/lateness/staging frontier, plus the paper's Table 6-style
-delta/W constraint sweep.
+Everything drives the `repro.api` façade: the per-strategy comparison
+iterates the strategy registry, the sweeps run through the shared layout
+cache, and the serving-stream DSE reuses the layer-stack planner.
 
 Run:  PYTHONPATH=src python examples/layout_explorer.py [--arch smollm-135m]
 """
 import argparse
 
+from repro import api
 from repro.configs import get_config
 from repro.core.dse import sweep_max_lanes, sweep_widths
 from repro.core.packing import serving_stream_report
-from repro.core.task import INV_HELMHOLTZ, matmul_problem
 from repro.quant import QuantSpec
 
 
@@ -21,18 +21,24 @@ def main() -> None:
     ap.add_argument("--arch", default="smollm-135m")
     args = ap.parse_args()
 
-    print("=== Custom-precision width sweep (paper Table 7 style) ===")
+    print("=== Strategy registry on the §4 example (Figs. 3-5) ===")
+    print(f"{'strategy':>12s} {'C_max':>6s} {'L_max':>6s} {'B_eff':>7s}")
+    for name, m in api.compare(api.PAPER_EXAMPLE).items():
+        print(f"{name:>12s} {m.c_max:>6d} {m.l_max:>6d} "
+              f"{m.efficiency:>7.1%}")
+
+    print("\n=== Custom-precision width sweep (paper Table 7 style) ===")
     print(f"{'widths':>12s} {'naive eff':>10s} {'iris eff':>10s} "
           f"{'iris C_max':>10s} {'iris L_max':>10s}")
-    for row in sweep_widths(matmul_problem, [(64, 64), (48, 40), (33, 31),
-                                             (30, 19), (17, 13)]):
+    for row in sweep_widths(api.matmul_problem, [(64, 64), (48, 40), (33, 31),
+                                                 (30, 19), (17, 13)]):
         print(f"{row['widths']!s:>12s} {row['naive_eff']:>10.3f} "
               f"{row['iris_eff']:>10.3f} {row['iris_cmax']:>10d} "
               f"{row['iris_lmax']:>10d}")
 
     print("\n=== delta/W constraint sweep (paper Table 6 style) ===")
     print(f"{'d/W':>4s} {'eff':>8s} {'L_max':>7s} {'fifo':>8s}")
-    for row in sweep_max_lanes(INV_HELMHOLTZ, [None, 4, 3, 2, 1]):
+    for row in sweep_max_lanes(api.INV_HELMHOLTZ, [None, 4, 3, 2, 1]):
         print(f"{str(row['max_lanes']):>4s} {row['eff']:>8.3f} "
               f"{row['lmax']:>7d} {row['fifo']:>8d}")
 

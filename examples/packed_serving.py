@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import get_config
-from repro.core.packing import layer_bundle_spec, pack_bundle
 from repro.models.model import Model
 from repro.models.quantized import (
     bytes_per_token_report,
@@ -50,14 +50,15 @@ def main() -> None:
           f"bf16={rep['bf16_MiB']:.2f} MiB")
     print(f"reduction vs bf16: {rep['bf16_MiB']/rep['packed_MiB']:.2f}x")
 
-    print("\n=== Iris stream layout per layer ===")
-    bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
-                               cfg.n_kv_heads, cfg.head_dim, spec)
-    pb = pack_bundle(bundle, m=512)
-    print(f"B_eff={pb.metrics_iris['B_eff']:.4f} "
-          f"L_max={pb.metrics_iris['L_max']} "
-          f"(homogeneous: {pb.metrics_homogeneous['L_max']}); "
-          f"decode units={pb.decode_plan().n_units}")
+    print("\n=== Iris stream layout per layer (repro.api façade) ===")
+    stack = api.plan_layer_stack(cfg, spec, m=512)
+    hom = api.compare(stack.problem, strategies=("homogeneous",))
+    print(f"B_eff={stack.b_eff:.4f} "
+          f"L_max={stack.plans[0].metrics.l_max} "
+          f"(homogeneous: {hom['homogeneous'].l_max}); "
+          f"decode units={stack.plans[0].decode_plan.n_units}; "
+          f"{stack.n_layers} layers from {stack.scheduler_runs} "
+          f"scheduler run(s)")
 
     print("\n=== Batched generation (packed decode path) ===")
     state = model.init_decode_state(args.batch, max_seq=64)

@@ -1,8 +1,10 @@
-"""Quickstart: the Iris layout algorithm end to end in ~60 seconds.
+"""Quickstart: the Iris layout pipeline end to end in ~60 seconds.
 
-1. Solve the paper's §4 worked example and print the layouts.
-2. Pack real data into the Iris layout and decode it with the Pallas
-   kernel (interpret mode on CPU).
+1. Solve the paper's §4 worked example under every registered layout
+   strategy through the `repro.api` façade and print the metrics.
+2. Pack real data into the Iris layout and decode it through both
+   registered decode backends (numpy oracle + Pallas kernel in
+   interpret mode), asserting bit-for-bit agreement.
 3. Train a tiny LM for a few steps with the full fault-tolerant runtime.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -12,37 +14,30 @@ import tempfile
 import jax
 import numpy as np
 
-from repro.core.baselines import homogeneous_layout, naive_layout
-from repro.core.codegen import pack_arrays, random_codes
-from repro.core.iris import schedule
-from repro.core.task import PAPER_EXAMPLE
-from repro.kernels.ops import decode_layout
+from repro import api
 
 
 def main() -> None:
     # ------------------------------------------------------------------
-    print("=== 1. Paper §4 example ===")
-    p = PAPER_EXAMPLE
-    for name, fn in (("naive (Fig 3)", naive_layout),
-                     ("homogeneous (Fig 4)", homogeneous_layout),
-                     ("iris (Fig 5)", schedule)):
-        m = fn(p).metrics()
-        print(f"{name:22s} C_max={m.c_max:3d}  L_max={m.l_max:3d}  "
+    print("=== 1. Paper §4 example (every registered strategy) ===")
+    for name in api.strategies():
+        m = api.plan(api.PAPER_EXAMPLE, name).metrics
+        print(f"{name:12s} C_max={m.c_max:3d}  L_max={m.l_max:3d}  "
               f"B_eff={m.efficiency:.1%}")
+    pl = api.plan(api.PAPER_EXAMPLE).validate()
     print("\nIris layout (rows = bus cycles, letters = arrays):")
-    print(schedule(p).render())
+    print(pl.render())
 
     # ------------------------------------------------------------------
-    print("\n=== 2. Pack + Pallas decode roundtrip ===")
-    lay = schedule(p)
-    codes = random_codes(p, seed=42)
-    buf = pack_arrays(lay, codes)
+    print("\n=== 2. Pack + decode roundtrip (numpy and pallas backends) ===")
+    codes = api.random_codes(pl.problem, seed=42)
+    buf = pl.pack(codes)
     print(f"packed buffer: {buf.shape[0]} cycles x {buf.shape[1]} bytes")
-    out = decode_layout(lay, buf, interpret=True)
+    outs = {b: pl.decode(buf, backend=b) for b in ("numpy", "pallas")}
     for name, want in codes.items():
-        got = np.asarray(out[name], dtype=np.uint64)
-        assert np.array_equal(got, want), name
-    print("kernel decode == original data for all arrays  [OK]")
+        for backend, out in outs.items():
+            assert np.array_equal(out[name], want), (backend, name)
+    print("numpy == pallas == original data for all arrays  [OK]")
 
     # ------------------------------------------------------------------
     print("\n=== 3. Tiny fault-tolerant training run ===")

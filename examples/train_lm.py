@@ -14,6 +14,7 @@ import pathlib
 import jax
 import numpy as np
 
+import repro
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLMPipeline
 from repro.launch.steps import build_train_step, init_train_state
@@ -38,6 +39,7 @@ def main() -> None:
                            n_kv_heads=2, d_ff=1024, vocab_size=2048,
                            head_dim=64, max_seq_len=args.seq_len)
     n_params = cfg.param_count()
+    print(f"iris-repro {repro.__version__}")
     print(f"config: {cfg.n_layers}L d={cfg.d_model} "
           f"({n_params/1e6:.1f}M params), seq={args.seq_len}, "
           f"batch={args.batch}, steps={args.steps}")

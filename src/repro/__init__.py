@@ -1,0 +1,68 @@
+"""Iris reproduction: automatic data layouts for high bandwidth utilization.
+
+``import repro`` is intentionally light (numpy only) and exposes the two
+things most consumers need: the :mod:`repro.api` pipeline façade and the
+curated core types.  The JAX/Pallas kernels, model zoo and launchers
+load lazily on first use (e.g. ``plan.decode(buf, backend="pallas")``).
+"""
+from __future__ import annotations
+
+from . import api
+from .core import (
+    ALL_BASELINES,
+    DEFAULT_CACHE,
+    INV_HELMHOLTZ,
+    PAPER_EXAMPLE,
+    ArraySpec,
+    Layout,
+    LayoutCache,
+    LayoutMetrics,
+    LayoutProblem,
+    hls_padded_layout,
+    homogeneous_layout,
+    make_problem,
+    matmul_problem,
+    naive_layout,
+    schedule,
+    schedule_many,
+)
+
+
+def _find_version() -> str:
+    """Package version, sourced from installed metadata or pyproject.toml.
+
+    Running from a source tree (``PYTHONPATH=src``) has no installed
+    distribution, so fall back to parsing the adjacent pyproject.toml.
+    """
+    try:
+        from importlib.metadata import version
+        return version("iris-repro")
+    except Exception:
+        pass
+    import pathlib
+    import re
+    pyproject = pathlib.Path(__file__).resolve().parents[2] / "pyproject.toml"
+    try:
+        m = re.search(r'^version\s*=\s*"([^"]+)"', pyproject.read_text(),
+                      re.MULTILINE)
+        if m:
+            return m.group(1)
+    except OSError:
+        pass
+    return "0.0.0+unknown"
+
+
+__version__ = _find_version()
+
+__all__ = [
+    "__version__", "api",
+    # problem spec
+    "ArraySpec", "LayoutProblem", "make_problem",
+    "PAPER_EXAMPLE", "INV_HELMHOLTZ", "matmul_problem",
+    # scheduler + cache
+    "schedule", "schedule_many", "LayoutCache", "DEFAULT_CACHE",
+    # layout IR & baselines
+    "Layout", "LayoutMetrics",
+    "naive_layout", "homogeneous_layout", "hls_padded_layout",
+    "ALL_BASELINES",
+]

@@ -1,3 +1,53 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's primary contribution: the Iris bus-layout system.
+
+Curated public surface of the core package — problem spec, scheduler
+engine + layout cache, layout IR & metrics, the baseline layouts, and
+decode codegen.  Deeper module paths (``repro.core.iris`` etc.) remain
+stable import targets; prefer the :mod:`repro.api` façade for the
+end-to-end pipeline.
+"""
+from .baselines import (
+    ALL_BASELINES,
+    hls_padded_layout,
+    homogeneous_layout,
+    naive_layout,
+)
+from .codegen import (
+    DecodePlan,
+    SlotPlan,
+    decode_plan,
+    emit_c_decode,
+    emit_c_pack,
+    pack_arrays,
+    random_codes,
+    unpack_arrays,
+)
+from .iris import DEFAULT_CACHE, LayoutCache, schedule, schedule_many
+from .layout import Counts, Interval, Layout, LayoutMetrics, Segment
+from .registry import Registry
+from .task import (
+    INV_HELMHOLTZ,
+    PAPER_EXAMPLE,
+    ArraySpec,
+    LayoutProblem,
+    make_problem,
+    matmul_problem,
+)
+
+__all__ = [
+    # problem spec
+    "ArraySpec", "LayoutProblem", "make_problem",
+    "PAPER_EXAMPLE", "INV_HELMHOLTZ", "matmul_problem",
+    # scheduler + cache
+    "schedule", "schedule_many", "LayoutCache", "DEFAULT_CACHE",
+    # layout IR & metrics
+    "Layout", "LayoutMetrics", "Interval", "Segment", "Counts",
+    # baselines
+    "naive_layout", "homogeneous_layout", "hls_padded_layout",
+    "ALL_BASELINES",
+    # codegen
+    "DecodePlan", "SlotPlan", "decode_plan", "pack_arrays",
+    "unpack_arrays", "emit_c_pack", "emit_c_decode", "random_codes",
+    # registries
+    "Registry",
+]

@@ -1,32 +1,56 @@
 """Design-space exploration helpers (paper §1: Iris enables rapid DSE
 over custom-precision widths and the delta/W resource/efficiency knob).
 
-Sweeps run through :func:`repro.core.iris.schedule_many` against a shared
+Sweeps run through the :mod:`repro.api` façade against a shared
 :class:`repro.core.iris.LayoutCache` (the process-wide ``DEFAULT_CACHE``
-unless overridden), so re-running a sweep — or running overlapping sweeps
-— never re-solves a scheduling instance it has already seen.  Cached and
-uncached sweeps return identical rows because the unified engine is
-deterministic and bit-exact in every mode (tested in tests/test_dse.py).
+unless overridden), so re-running a sweep — or running overlapping
+sweeps — never re-solves a scheduling instance it has already seen.
+Cached and uncached sweeps return identical rows because the unified
+engine is deterministic and bit-exact in every mode (tested in
+tests/test_dse.py).
+
+:func:`sweep_strategies` is the registry-generic form: one metrics
+column per registered strategy, no per-family imports.
 """
 from __future__ import annotations
 
 from typing import Callable, Sequence
 
-from .baselines import homogeneous_layout
-from .iris import DEFAULT_CACHE, LayoutCache, schedule_many
+from .iris import DEFAULT_CACHE, LayoutCache
+from .layout import LayoutMetrics
 from .task import LayoutProblem, make_problem
+
+
+def sweep_strategies(problems: Sequence[LayoutProblem],
+                     strategies: Sequence[str] | None = None,
+                     cache: LayoutCache | None = DEFAULT_CACHE,
+                     ) -> list[dict[str, LayoutMetrics]]:
+    """Metrics for every problem x registered strategy.
+
+    Iterates the façade's strategy registry (all registered strategies
+    unless narrowed), returning one ``{strategy: LayoutMetrics}`` dict
+    per problem in input order.
+    """
+    from repro import api
+
+    return [
+        api.compare(p, strategies=strategies, cache=cache) for p in problems
+    ]
 
 
 def sweep_widths(problem_fn: Callable[..., LayoutProblem],
                  width_pairs: Sequence[tuple[int, int]],
                  cache: LayoutCache | None = DEFAULT_CACHE) -> list[dict]:
-    """Paper Table 7: metrics across custom element widths."""
+    """Paper Table 7: metrics across custom element widths.
+
+    Row keys keep the paper's naming: ``naive_*`` is the homogeneous
+    ('packed naive') comparator of §6.
+    """
     problems = [problem_fn(*widths) for widths in width_pairs]
-    layouts = schedule_many(problems, cache=cache)
+    swept = sweep_strategies(problems, ("homogeneous", "iris"), cache=cache)
     out = []
-    for widths, p, lay in zip(width_pairs, problems, layouts):
-        nm = homogeneous_layout(p).metrics()
-        im = lay.metrics()
+    for widths, row in zip(width_pairs, swept):
+        nm, im = row["homogeneous"], row["iris"]
         out.append({
             "widths": widths,
             "naive_eff": nm.efficiency,
@@ -53,10 +77,10 @@ def sweep_max_lanes(problem: LayoutProblem,
             max_lanes=cap)
         for cap in lane_caps
     ]
-    layouts = schedule_many(problems, cache=cache)
+    swept = sweep_strategies(problems, ("iris",), cache=cache)
     out = []
-    for cap, lay in zip(lane_caps, layouts):
-        m = lay.metrics()
+    for cap, row in zip(lane_caps, swept):
+        m = row["iris"]
         out.append({
             "max_lanes": cap,
             "eff": m.efficiency,

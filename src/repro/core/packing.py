@@ -26,9 +26,8 @@ import numpy as np
 
 from repro.quant.qtypes import QuantSpec
 
-from .baselines import hls_padded_layout, homogeneous_layout
 from .codegen import decode_plan, pack_arrays
-from .iris import DEFAULT_CACHE, LayoutCache, schedule
+from .iris import DEFAULT_CACHE, LayoutCache
 from .layout import Layout
 from .task import ArraySpec, LayoutProblem
 
@@ -141,9 +140,13 @@ def pack_bundle(bundle: list[BundleTensor], m: int = 4096,
     (and every repeated serving request) a cache hit — the scheduler
     never re-runs.
     """
+    # deferred façade import: core stays importable without repro.api,
+    # mirroring api.plan_layer_stack's deferred import of this module
+    from repro import api
+
     prob = bundle_problem(bundle, m=m)
-    lay = schedule(prob, mode=mode, cache=cache)
-    lay.validate()
+    pl = api.plan(prob, "iris", mode=mode, cache=cache).validate()
+    lay = pl.layout
     buf = None
     if data is not None:
         # data arrives at element granularity; regroup into units
@@ -164,13 +167,14 @@ def pack_bundle(bundle: list[BundleTensor], m: int = 4096,
             buf = None      # >64-bit units: plan-only (kernel still works)
         else:
             buf = pack_arrays(lay, unit_data)
+    baselines = api.compare(prob, strategies=("homogeneous", "hls_padded"))
     return PackedBundle(
         problem=prob,
         layout=lay,
         buffer=buf,
-        metrics_iris=lay.metrics().row(),
-        metrics_homogeneous=homogeneous_layout(prob).metrics().row(),
-        metrics_padded=hls_padded_layout(prob).metrics().row(),
+        metrics_iris=pl.metrics.row(),
+        metrics_homogeneous=baselines["homogeneous"].row(),
+        metrics_padded=baselines["hls_padded"].row(),
     )
 
 
@@ -201,9 +205,12 @@ def serving_stream_report(cfg, qspec: QuantSpec, m: int = 4096,
       *plus* dataflow-ordered interleaving, which additionally minimizes
       arrival lateness (L_max) and decode staging (FIFO depth).
     """
-    bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
-                               cfg.n_kv_heads, cfg.head_dim, qspec)
-    pb = pack_bundle(bundle, m=m, cache=cache)
+    from repro import api
+
+    stack = api.plan_layer_stack(cfg, qspec, m=m, n_layers=1, cache=cache)
+    bundle = stack.bundle
+    pl = stack.plans[0]
+    unit_metrics = api.compare(stack.problem, strategies=("homogeneous",))
     p_tot_bits = sum(b.width_bits * b.n_elems for b in bundle)
     n_elems = sum(b.n_elems for b in bundle)
     hom_cycles = sum(
@@ -212,21 +219,22 @@ def serving_stream_report(cfg, qspec: QuantSpec, m: int = 4096,
         _per_tensor_cycles(_next_pow2(b.width_bits), b.n_elems, m)
         for b in bundle)
     line_b = m / 8
+    iris_row = pl.metrics.row()
+    hom_row = unit_metrics["homogeneous"].row()
     return {
         "arch": cfg.name,
         "bits": qspec.bits,
         "useful_MiB_per_layer": p_tot_bits / 8 / 2**20,
-        "iris_MiB_per_layer": pb.layout.c_max * line_b / 2**20,
+        "iris_MiB_per_layer": stack.stream_bytes_per_layer / 2**20,
         "homogeneous_MiB_per_layer": hom_cycles * line_b / 2**20,
         "padded_MiB_per_layer": pad_cycles * line_b / 2**20,
         "bf16_MiB_per_layer": n_elems * 2 / 2**20,
-        "iris_efficiency": pb.metrics_iris["B_eff"],
+        "iris_efficiency": iris_row["B_eff"],
         "homogeneous_efficiency": p_tot_bits / (hom_cycles * m),
         "padded_efficiency": p_tot_bits / (pad_cycles * m),
-        "iris_L_max": pb.metrics_iris["L_max"],
-        "homogeneous_unit_L_max": pb.metrics_homogeneous["L_max"],
-        "iris_unit_fifo": sum(pb.metrics_iris["FIFO"].values()),
-        "homogeneous_unit_fifo": sum(
-            pb.metrics_homogeneous["FIFO"].values()),
-        "n_decode_units": pb.decode_plan().n_units,
+        "iris_L_max": iris_row["L_max"],
+        "homogeneous_unit_L_max": hom_row["L_max"],
+        "iris_unit_fifo": sum(iris_row["FIFO"].values()),
+        "homogeneous_unit_fifo": sum(hom_row["FIFO"].values()),
+        "n_decode_units": pl.decode_plan.n_units,
     }

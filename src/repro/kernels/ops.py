@@ -8,8 +8,6 @@ TPU analogue of the paper's single HLS read_data module).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

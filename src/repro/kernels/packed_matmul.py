@@ -42,10 +42,10 @@ def _packed_matmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
     w_packed = w_ref[...]                      # (bk // lanes, bn) uint32
     rows, bn = w_packed.shape
     bk = rows * lanes
-    # funnel-shift each lane out of its word: lane l of word r is code
-    # k = r * lanes + l  ->  (rows, lanes, bn) -> (bk, bn)
+    # funnel-shift each lane out of its word: lane ln of word r is code
+    # k = r * lanes + ln  ->  (rows, lanes, bn) -> (bk, bn)
     planes = [
-        ((w_packed >> jnp.uint32(l * bits)) & mask) for l in range(lanes)
+        ((w_packed >> jnp.uint32(ln * bits)) & mask) for ln in range(lanes)
     ]
     codes = jnp.stack(planes, axis=1).reshape(bk, bn)
     wq = codes.astype(jnp.float32) - bias      # symmetric biased codes

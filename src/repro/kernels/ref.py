@@ -38,7 +38,7 @@ def packed_matmul_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
     kw, n = w_packed.shape
     k = kw * lanes
     planes = [
-        ((w_packed >> jnp.uint32(l * bits)) & mask) for l in range(lanes)
+        ((w_packed >> jnp.uint32(ln * bits)) & mask) for ln in range(lanes)
     ]
     codes = jnp.stack(planes, axis=1).reshape(k, n)
     wq = codes.astype(jnp.float32) - bias

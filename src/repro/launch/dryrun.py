@@ -25,7 +25,6 @@ Usage:
   python -m repro.launch.dryrun --arch jamba-1.5-large-398b --shape long_500k --mesh multi
 """
 import argparse
-import dataclasses
 import json
 import pathlib
 import time

@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -60,22 +59,18 @@ def main() -> None:
               f"bf16={rep['bf16_MiB']:.2f} "
               f"({rep['bf16_MiB']/rep['packed_MiB']:.2f}x reduction)")
 
-        # plan the per-layer Iris stream layouts through the shared layout
-        # cache: every layer of a uniform stack is the same scheduling
-        # instance, so the scheduler runs once and each further layer —
-        # and each repeated request with the same shapes — is a cache hit
-        from repro.core.iris import DEFAULT_CACHE, schedule_many
-        from repro.core.packing import bundle_problem, layer_bundle_spec
+        # plan the per-layer Iris stream layouts through the façade: every
+        # layer of a uniform stack is the same scheduling instance, so the
+        # scheduler runs once and each further layer — and each repeated
+        # request with the same shapes — is a cache hit
+        from repro import api
 
-        bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
-                                   cfg.n_kv_heads, cfg.head_dim, qspec)
-        probs = [bundle_problem(bundle) for _ in range(cfg.n_layers)]
-        layouts = schedule_many(probs, cache=DEFAULT_CACHE)
-        st = DEFAULT_CACHE.stats
-        print(f"iris stream plan: {cfg.n_layers} layers, "
-              f"C_max={layouts[0].c_max}/layer, "
-              f"B_eff={layouts[0].metrics().efficiency:.4f}, "
-              f"scheduler runs={st['misses']} cache hits={st['hits']}")
+        stack = api.plan_layer_stack(cfg, qspec)
+        print(f"iris stream plan: {stack.n_layers} layers, "
+              f"C_max={stack.c_max_per_layer}/layer, "
+              f"B_eff={stack.b_eff:.4f}, "
+              f"scheduler runs={stack.scheduler_runs} "
+              f"cache hits={stack.cache_hits}")
 
     loop = ServeLoop(model, params, batch_size=args.batch_size,
                      max_seq=args.max_seq)

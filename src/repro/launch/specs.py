@@ -8,7 +8,6 @@ term at 32k/500k context).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -16,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.model import Model
-from repro.models.transformer import n_periods, period_template
+from repro.models.transformer import n_periods
 
 
 def sds(shape, dtype) -> jax.ShapeDtypeStruct:

@@ -8,11 +8,9 @@ All functions are built per-config and are pure (jit/pjit-ready).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.model import Model

@@ -87,7 +87,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         qi, q_base = args                       # (B, cq, H, hd), scalar
 
         def kv_step(carry, inputs):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kj, vj, kv_base = inputs
             s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
                            preferred_element_type=jnp.float32) * scale
@@ -100,7 +100,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(axis=-1)
+            l_new = lsum * corr + p.sum(axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32))
             return (m_new, l_new, acc_new), None
@@ -113,12 +113,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         # instead of saving one per scan step (which would materialize the
         # full S^2 matrix as scan residuals — the whole point of flash
         # attention is not to do that)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lsum, acc), _ = jax.lax.scan(
             jax.checkpoint(kv_step), (m0, l0, a0),
             (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
              kv_bases),
         )
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]
         return out.transpose(0, 2, 1, 3)                  # (B, cq, H, hd)
 
     q_bases = jnp.arange(nq) * q_chunk

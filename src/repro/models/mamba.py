@@ -67,7 +67,6 @@ def apply_mamba(cfg: ModelConfig, p: dict, x: jax.Array,
     ssm = cfg.ssm
     b, t, d = x.shape
     di = ssm.expand * d
-    h = di // ssm.head_dim
     xh, z, bk, cq, v, log_a = _ssm_inputs(cfg, p, x)
     # scalar-per-head decay stays (B,T,H,1); the scan broadcasts lazily
     out, state = recurrent_scan(cq, bk, v, log_a[..., None], state0=state0,
@@ -83,7 +82,6 @@ def apply_mamba_step(cfg: ModelConfig, p: dict, x: jax.Array,
     b, d = x.shape
     ssm = cfg.ssm
     di = ssm.expand * d
-    h = di // ssm.head_dim
     xh, z, bk, cq, v, log_a = _ssm_inputs(cfg, p, x[:, None])
     out, state = recurrent_step(cq[:, 0], bk[:, 0], v[:, 0],
                                 log_a[:, 0, :, None], state,

@@ -33,7 +33,6 @@ from .layers import (
 )
 from .shard_utils import dp_spec, maybe_shard
 from .transformer import (
-    SubLayerSpec,
     forward_stack,
     init_stack,
     n_periods,

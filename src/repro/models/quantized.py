@@ -29,7 +29,6 @@ from repro.kernels.packed_matmul import packed_matmul
 from repro.quant.qtypes import QuantSpec, pack_codes_u32, quantize
 
 from .layers import activation, apply_norm, rope_freqs
-from .model import Model
 from .transformer import n_periods, period_template
 
 #: weight names quantized in a dense decoder sublayer
@@ -121,7 +120,6 @@ def packed_decode_step(cfg: ModelConfig, pp: PackedParams, state: dict,
     """
     from . import attention as attn
 
-    model = Model(cfg)
     spec = pp.spec
     inv_freq = rope_freqs(cfg)
     pos = state["pos"]

@@ -14,12 +14,11 @@ matches the single-device reference bitwise (f32).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,7 +22,6 @@ import dataclasses
 import time
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from repro.checkpoint.checkpoint import CheckpointManager

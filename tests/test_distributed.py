@@ -7,7 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 
 def run_sub(body: str, n_devices: int = 8, timeout: int = 560) -> str:

@@ -1,7 +1,6 @@
 """Loop-aware HLO cost extraction vs ground truth (unrolled references)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import analyze

@@ -1,6 +1,5 @@
 """Substrate tests: data pipeline, checkpointing, optimizer, compression,
 fault-tolerant train loop, serving loop."""
-import threading
 import time
 
 import jax
@@ -170,7 +169,6 @@ def _tiny_setup(tmp_path, total_steps=12, ckpt_interval=4):
     cfg = get_config("smollm-135m").reduced(
         n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
         vocab_size=64, head_dim=32)
-    model = Model(cfg, remat="none")
     from repro.launch.steps import build_train_step, init_train_state
     from repro.optim.adamw import AdamWConfig as AC
     step_fn = jax.jit(build_train_step(
@@ -259,7 +257,6 @@ def test_slot_isolation_outputs_match():
 
     def run(with_history):
         loop = ServeLoop(model, params, batch_size=1, max_seq=48)
-        outs = {}
         reqs = []
         if with_history:
             r0 = Request(uid=0, prompt=[31, 17, 5, 23], max_new_tokens=6)
