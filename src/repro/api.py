@@ -54,6 +54,12 @@ from .core.codegen import (
     random_codes,
     unpack_arrays,
 )
+from .core.exec_plan import (
+    ExecProgram,
+    lower_exec,
+    pack_compiled,
+    unpack_compiled,
+)
 from .core.iris import DEFAULT_CACHE, LayoutCache, schedule, schedule_many
 from .core.layout import Layout, LayoutMetrics
 from .core.registry import Registry
@@ -72,6 +78,7 @@ __all__ = [
     "Backend", "Plan", "LayerStackPlan",
     "STRATEGIES", "BACKENDS", "strategies", "backends",
     "plan", "plan_many", "compare", "plan_layer_stack",
+    "ExecProgram", "lower_exec", "pack_compiled", "unpack_compiled",
 ]
 
 
@@ -128,16 +135,24 @@ def _as_u64(out: dict[str, Any]) -> dict[str, np.ndarray]:
 
 # backend callables take explicit keywords only — a misspelled option
 # must raise TypeError, not silently fall back to a default
-def _decode_numpy(pl: "Plan", buf: np.ndarray) -> dict[str, np.ndarray]:
+def _decode_numpy(pl: "Plan", buf: np.ndarray, *,
+                  compiled: bool = True) -> dict[str, np.ndarray]:
+    if compiled:
+        return _as_u64(unpack_compiled(pl.layout, np.asarray(buf),
+                                       program=pl.exec_program))
     return _as_u64(unpack_arrays(pl.layout, np.asarray(buf)))
 
 
 def _decode_pallas(pl: "Plan", buf: np.ndarray, *,
-                   interpret: bool = True) -> dict[str, np.ndarray]:
+                   interpret: bool = True,
+                   fused: bool = True) -> dict[str, np.ndarray]:
     from .kernels.ops import decode_layout  # lazy: pulls in JAX
 
+    if fused:
+        return _as_u64(decode_layout(pl.layout, buf, interpret=interpret,
+                                     fused=True, program=pl.exec_program))
     return _as_u64(decode_layout(pl.layout, buf, interpret=interpret,
-                                 plan=pl.decode_plan))
+                                 fused=False, plan=pl.decode_plan))
 
 
 def _emit_c(pl: "Plan", *, artifact: str = "decode",
@@ -199,6 +214,7 @@ class Plan:
         self._layout: Layout | None = None
         self._metrics: LayoutMetrics | None = None
         self._decode_plan: DecodePlan | None = None
+        self._exec_program: ExecProgram | None = None
 
     # -- lazy pipeline stages ------------------------------------------
     @property
@@ -226,6 +242,17 @@ class Plan:
         return self._decode_plan
 
     @property
+    def exec_program(self) -> ExecProgram:
+        """Compiled execution plan (flat pack/unpack tables + the fused
+        Pallas kernel's slot table).  Lowered once per layout signature:
+        the program cache lives on the layout and is shared across
+        :class:`~repro.core.iris.LayoutCache` rebinds, so a cache hit
+        returns a plan whose program is already built."""
+        if self._exec_program is None:
+            self._exec_program = lower_exec(self.layout)
+        return self._exec_program
+
+    @property
     def c_max(self) -> int:
         return self.layout.c_max
 
@@ -235,9 +262,18 @@ class Plan:
         return self.layout.c_max * self.problem.m // 8
 
     # -- uniform execution surface -------------------------------------
-    def pack(self, arrays: dict[str, np.ndarray]) -> np.ndarray:
+    def pack(self, arrays: dict[str, np.ndarray], *,
+             compiled: bool = True) -> np.ndarray:
         """Host-side organization (paper Listing 1): pack per-array codes
-        into the unified ``(c_max, m/8)`` uint8 buffer."""
+        into the unified ``(c_max, m/8)`` uint8 buffer.
+
+        ``compiled=True`` (default) runs the vectorized
+        :class:`~repro.core.exec_plan.ExecProgram`; ``compiled=False``
+        runs the legacy per-slot reference path.  Both are bit-identical.
+        """
+        if compiled:
+            return pack_compiled(self.layout, arrays,
+                                 program=self.exec_program)
         return pack_arrays(self.layout, arrays)
 
     def decode(self, buf: np.ndarray, backend: str = "numpy",
@@ -365,6 +401,16 @@ class LayerStackPlan:
     @property
     def stream_bytes_per_layer(self) -> int:
         return self.plans[0].stream_bytes
+
+    def exec_program(self) -> ExecProgram:
+        """Compiled execution plan at *bundle-element* granularity.
+
+        Lowered with each tensor's ``width_bits`` as the piece width, so
+        bundle data packs/decodes at element granularity even when the
+        scheduled unit width exceeds 64 bits.  All layers share one
+        layout signature, hence one program (cached on the layout)."""
+        ew = tuple(b.width_bits for b in self.bundle)
+        return lower_exec(self.plans[0].layout, elem_widths=ew)
 
 
 def plan_layer_stack(cfg, qspec, *, m: int = 4096,

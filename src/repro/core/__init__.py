@@ -22,6 +22,13 @@ from .codegen import (
     random_codes,
     unpack_arrays,
 )
+from .exec_plan import (
+    ExecProgram,
+    KernelTable,
+    lower_exec,
+    pack_compiled,
+    unpack_compiled,
+)
 from .iris import DEFAULT_CACHE, LayoutCache, schedule, schedule_many
 from .layout import Counts, Interval, Layout, LayoutMetrics, Segment
 from .registry import Registry
@@ -48,6 +55,9 @@ __all__ = [
     # codegen
     "DecodePlan", "SlotPlan", "decode_plan", "pack_arrays",
     "unpack_arrays", "emit_c_pack", "emit_c_decode", "random_codes",
+    # compiled execution plans
+    "ExecProgram", "KernelTable", "lower_exec", "pack_compiled",
+    "unpack_compiled",
     # registries
     "Registry",
 ]

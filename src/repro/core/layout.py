@@ -98,6 +98,10 @@ class Layout:
         )
         self._intervals: list[Interval] | None = None
         self._cycles: list[list[Segment]] | None = None
+        # lowered execution programs (repro.core.exec_plan), keyed by
+        # piece-width tuple; shared across rebinds (programs are
+        # name-free), so a LayoutCache hit never re-lowers
+        self._exec_cache: dict[tuple, object] = {}
         self._build_intervals()
 
     # ------------------------------------------------------------------
@@ -143,7 +147,9 @@ class Layout:
             raise ValueError(
                 "rebind target is a different scheduling instance"
             )
-        return Layout(problem, self.count_intervals)
+        lay = Layout(problem, self.count_intervals)
+        lay._exec_cache = self._exec_cache
+        return lay
 
     def _build_intervals(self) -> None:
         prob = self.problem

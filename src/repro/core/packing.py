@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.quant.qtypes import QuantSpec
 
-from .codegen import decode_plan, pack_arrays
+from .codegen import decode_plan
+from .exec_plan import ExecProgram, lower_exec, pack_compiled
 from .iris import DEFAULT_CACHE, LayoutCache
 from .layout import Layout
 from .task import ArraySpec, LayoutProblem
@@ -60,6 +61,9 @@ class PackedBundle:
     metrics_iris: dict
     metrics_homogeneous: dict
     metrics_padded: dict
+    #: compiled execution plan at bundle-element granularity (piece width
+    #: = each tensor's width_bits); shared via the layout's exec cache
+    exec_program: ExecProgram | None = None
 
     @property
     def stream_bytes(self) -> int:
@@ -67,6 +71,19 @@ class PackedBundle:
 
     def decode_plan(self):
         return decode_plan(self.layout)
+
+    def unpack(self, buf: np.ndarray | None = None) -> dict[str, np.ndarray]:
+        """Element-granularity codes from a packed buffer (vectorized).
+
+        Tensors are padded up to whole scheduling units; trailing pad
+        elements decode as zeros.
+        """
+        buf = self.buffer if buf is None else buf
+        if buf is None:
+            raise ValueError("bundle was planned without data")
+        out = self.exec_program.unpack_indexed(np.asarray(buf))
+        names = [a.name for a in self.problem.arrays]
+        return {names[i]: v for i, v in out.items()}
 
 
 def layer_bundle_spec(d_model: int, d_ff: int, n_heads: int,
@@ -147,26 +164,21 @@ def pack_bundle(bundle: list[BundleTensor], m: int = 4096,
     prob = bundle_problem(bundle, m=m)
     pl = api.plan(prob, "iris", mode=mode, cache=cache).validate()
     lay = pl.layout
+    # compiled execution plan at element granularity: the program's piece
+    # width is each tensor's width_bits, so element data packs directly —
+    # no per-unit merge loop, and >64-bit scheduling units pack fine
+    ew = tuple(b.width_bits for b in bundle)
+    prog = lower_exec(lay, elem_widths=ew)
     buf = None
     if data is not None:
-        # data arrives at element granularity; regroup into units
-        unit_data = {}
-        for spec in prob.arrays:
-            b = next(x for x in bundle if x.name == spec.name)
-            unit = spec.width // b.width_bits
+        padded = {}
+        for i, spec in enumerate(prob.arrays):
             vals = np.asarray(data[spec.name]).reshape(-1).astype(np.uint64)
-            pad = spec.depth * unit - vals.shape[0]
+            pad = prog.piece_depths[i] - vals.shape[0]
             if pad:
                 vals = np.pad(vals, (0, pad))
-            merged = np.zeros(spec.depth, dtype=np.uint64)
-            vals = vals.reshape(spec.depth, unit)
-            for k in range(unit):
-                merged |= vals[:, k] << np.uint64(k * b.width_bits)
-            unit_data[spec.name] = merged
-        if any(a.width > 64 for a in prob.arrays):
-            buf = None      # >64-bit units: plan-only (kernel still works)
-        else:
-            buf = pack_arrays(lay, unit_data)
+            padded[spec.name] = vals
+        buf = pack_compiled(lay, padded, program=prog)
     baselines = api.compare(prob, strategies=("homogeneous", "hls_padded"))
     return PackedBundle(
         problem=prob,
@@ -175,6 +187,7 @@ def pack_bundle(bundle: list[BundleTensor], m: int = 4096,
         metrics_iris=pl.metrics.row(),
         metrics_homogeneous=baselines["homogeneous"].row(),
         metrics_padded=baselines["hls_padded"].row(),
+        exec_program=prog,
     )
 
 

@@ -1,22 +1,25 @@
-"""Pallas TPU kernel: decode an Iris-packed bus buffer into per-array streams.
+"""Pallas TPU kernels: decode an Iris-packed bus buffer into per-array streams.
 
 This is the accelerator-side read module of the paper (Listing 2), adapted
-to the TPU memory hierarchy:
+to the TPU memory hierarchy.  Two generations live here:
 
-* the HLS ``for (t) #pragma HLS pipeline II=1`` loop over bus words becomes
-  a Pallas grid over row tiles of the packed buffer — BlockSpec pipelining
-  gives the same effect as II=1: the next tile's HBM->VMEM DMA overlaps the
-  current tile's unpack (double buffering);
-* the per-cycle ``elem.range(hi, lo)`` bit-slices become static funnel
-  shifts over VREG lanes (offsets are compile-time constants per layout
-  interval, exactly like the generated HLS code);
-* the per-array output streams become contiguous VMEM tiles written back
-  to HBM.
-
-One ``pallas_call`` is emitted per (interval, slot) decode unit — the
-direct analogue of the unrolled ``if (t == ...)`` arms in Listing 2.  All
-shapes are static; the enclosing ``ops.decode_layout`` stitches results
-into per-array outputs with static slices, so the whole program jits.
+* :func:`decode_layout_fused` — **one** ``pallas_call`` for the whole
+  buffer.  The HLS ``for (t) #pragma HLS pipeline II=1`` loop over bus
+  words becomes a single Pallas grid over row tiles; the per-cycle
+  ``elem.range(hi, lo)`` arms become a static slot table
+  (:class:`~repro.core.exec_plan.KernelTable`): per (row, lane) one
+  uint32 encoding ``bit_offset | width << 20``.  Each grid step funnel-
+  shifts every lane of its tile out of the packed words (dynamic per-lane
+  word gather + shift), writing a row-major ``(rows, lanes)`` uint32
+  grid; static per-array gathers then rearrange the grid into element
+  streams.  The whole decode jit-traces once per layout signature (the
+  trace is memoized on the :class:`~repro.core.exec_plan.ExecProgram`,
+  which the layout cache shares across rebinds).  Arrays whose piece
+  width exceeds 32 bits are decoded by the vectorized host path and
+  merged into the same output dict.
+* :func:`decode_slot` — the legacy per-(interval, slot) decode unit, one
+  ``pallas_call`` per unit.  Kept as the reference oracle
+  (``ops.decode_layout(..., fused=False)``) and for property tests.
 
 Bit conventions match ``core.codegen``: bus rows are little-endian u32
 words; an element's LSB sits at ``bit_offset`` and may straddle one word
@@ -28,7 +31,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.core.exec_plan import _TAB_WIDTH_SHIFT, ExecProgram, lower_exec
+from repro.core.layout import Layout
 
 # Rows of the packed buffer processed per grid step.  8 sublanes x 128
 # lanes is the native f32/u32 VREG tile; 256 rows keeps the input block
@@ -36,6 +43,113 @@ from jax.experimental import pallas as pl
 DEFAULT_TILE_ROWS = 256
 
 
+# ----------------------------------------------------------------------
+# fused whole-buffer decode (one pallas_call)
+# ----------------------------------------------------------------------
+def _decode_fused_kernel(words_ref, tab_ref, out_ref) -> None:
+    """Decode every lane of a row tile against its static slot table.
+
+    words_ref: (tile, words32) uint32 — packed bus rows.
+    tab_ref:   (tile, lanes)   uint32 — ``bit_offset | width << 20``.
+    out_ref:   (tile, lanes)   uint32 — decoded piece per (row, lane).
+    """
+    x = words_ref[...]
+    tab = tab_ref[...]
+    off = tab & jnp.uint32((1 << _TAB_WIDTH_SHIFT) - 1)
+    width = tab >> _TAB_WIDTH_SHIFT
+    w0 = (off >> 5).astype(jnp.int32)
+    sh = off & jnp.uint32(31)
+    last = x.shape[1] - 1
+    lo = jnp.take_along_axis(x, w0, axis=1)
+    hi = jnp.take_along_axis(x, jnp.minimum(w0 + 1, last), axis=1)
+    v = lo >> sh
+    # funnel in the straddling word; (32 - sh) & 31 is exact when sh > 0
+    hi_part = hi << ((jnp.uint32(32) - sh) & jnp.uint32(31))
+    v = v | jnp.where(sh > 0, hi_part, jnp.uint32(0))
+    # width == 0 marks an empty lane; width == 32 keeps every bit
+    mask = jnp.where(
+        width == 0,
+        jnp.uint32(0),
+        jnp.uint32(0xFFFFFFFF) >> ((jnp.uint32(32) - width) & jnp.uint32(31)),
+    )
+    out_ref[...] = v & mask
+
+
+def _fused_grid_fn(prog: ExecProgram, tile_rows: int, interpret: bool):
+    """Jitted (words32 -> per-array streams) closure, memoized per program.
+
+    The slot table and gather indices are baked in as constants, so the
+    trace happens once per (layout signature, piece widths) — repeated
+    decodes, including across LayoutCache rebinds, reuse it.
+    """
+    key = ("fused", tile_rows, interpret)
+    fn = prog.jit_cache.get(key)
+    if fn is not None:
+        return fn
+    kt = prog.kernel
+    tile = min(tile_rows, _round_up(prog.c_max, 8))
+    padded = _round_up(prog.c_max, tile)
+    tab = np.zeros((padded, kt.lanes), dtype=np.uint32)
+    tab[:prog.c_max] = kt.tab
+    tab_j = jnp.asarray(tab)
+    gathers = [(i, jnp.asarray(g)) for i, g in kt.gathers]
+
+    @jax.jit
+    def run(words: jax.Array) -> dict[int, jax.Array]:
+        if padded != prog.c_max:
+            words = jnp.pad(words, ((0, padded - prog.c_max), (0, 0)))
+        grid = pl.pallas_call(
+            _decode_fused_kernel,
+            grid=(padded // tile,),
+            in_specs=[
+                pl.BlockSpec((tile, kt.words32), lambda i: (i, 0)),
+                pl.BlockSpec((tile, kt.lanes), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((tile, kt.lanes), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((padded, kt.lanes), jnp.uint32),
+            interpret=interpret,
+        )(words, tab_j)
+        flat = grid.reshape(-1)
+        return {i: jnp.take(flat, g) for i, g in gathers}
+
+    prog.jit_cache[key] = run
+    return run
+
+
+def decode_layout_fused(layout: Layout, buf_u8, *,
+                        program: ExecProgram | None = None,
+                        elem_widths: tuple[int, ...] | None = None,
+                        tile_rows: int = DEFAULT_TILE_ROWS,
+                        interpret: bool = True) -> dict[str, jax.Array]:
+    """Decode the whole packed buffer with a single ``pallas_call``.
+
+    Pieces up to 32 bits wide go through the fused kernel; wider arrays
+    are decoded by the vectorized numpy host path
+    (:meth:`ExecProgram.unpack_array`) and merged into the result, so
+    mixed-width bundles decode end-to-end.
+    """
+    prog = program if program is not None \
+        else lower_exec(layout, elem_widths)
+    names = [a.name for a in layout.problem.arrays]
+    buf = np.asarray(buf_u8, dtype=np.uint8)
+    outs: dict[str, jax.Array] = {}
+    if prog.kernel.gathers:
+        words = jnp.asarray(prog.buffer_words32(buf))
+        kern = _fused_grid_fn(prog, tile_rows, interpret)(words)
+        for i, v in kern.items():
+            outs[names[i]] = v
+    if prog.host_arrays:
+        flat = prog.buffer_words64(buf)
+        for i in prog.host_arrays:
+            # stays numpy uint64: jnp would truncate to 32 bits under the
+            # default x64-disabled config
+            outs[names[i]] = prog.unpack_array(flat, i)
+    return outs
+
+
+# ----------------------------------------------------------------------
+# legacy per-(interval, slot) decode unit — the reference oracle
+# ----------------------------------------------------------------------
 def _decode_slot_kernel(in_ref, out_ref, *, offsets: tuple[int, ...],
                         width: int) -> None:
     """Unpack ``len(offsets)`` fixed-position lanes from each bus row.

@@ -1,10 +1,18 @@
 """Public jit'd entry points for the kernels package.
 
-``decode_layout`` runs the full accelerator-side read module: it walks the
-static :class:`~repro.core.codegen.DecodePlan` and emits one Pallas decode
-unit per (interval, slot), stitching results into per-array code streams —
-the whole program is static and jits into a single XLA computation (the
-TPU analogue of the paper's single HLS read_data module).
+``decode_layout`` runs the accelerator-side read module.  The default
+(``fused=True``) path executes the compiled
+:class:`~repro.core.exec_plan.ExecProgram`: one Pallas kernel gridded
+over row tiles decodes the whole buffer against a static slot table —
+the TPU analogue of the paper's single HLS ``read_data`` module, one
+``pallas_call`` and one jit trace per layout signature.
+
+``fused=False`` keeps the legacy per-(interval, slot) program — one
+``pallas_call`` plus one ``dynamic_update_slice`` per decode unit — as
+the reference oracle.  In both paths, slots whose element width exceeds
+32 bits are decoded by the vectorized numpy host path
+(``core.exec_plan`` / ``core.codegen``) instead of raising, so
+mixed-width bundles decode end-to-end.
 """
 from __future__ import annotations
 
@@ -12,10 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codegen import DecodePlan, decode_plan
+from repro.core.codegen import DecodePlan, _gather_bits, decode_plan
+from repro.core.exec_plan import ExecProgram
 from repro.core.layout import Layout
 
-from .layout_decode import decode_slot
+from .layout_decode import decode_layout_fused, decode_slot
 from .packed_matmul import packed_matmul  # noqa: F401  (re-export)
 
 
@@ -37,19 +46,39 @@ def buffer_to_u32(buf_u8: np.ndarray | jax.Array) -> jax.Array:
 
 def decode_layout(layout: Layout, buf_u8: np.ndarray | jax.Array, *,
                   interpret: bool = True,
-                  plan: DecodePlan | None = None) -> dict[str, jax.Array]:
-    """Decode an Iris-packed buffer into per-array uint32 code streams."""
+                  plan: DecodePlan | None = None,
+                  fused: bool | None = None,
+                  program: ExecProgram | None = None,
+                  ) -> dict[str, jax.Array]:
+    """Decode an Iris-packed buffer into per-array code streams.
+
+    ``fused=None`` (default) resolves to the fused single-kernel path
+    unless a legacy per-slot ``plan`` is supplied — a caller handing in
+    a precomputed :class:`DecodePlan` gets the path that consumes it.
+    Passing both ``fused=True`` and ``plan`` is a contradiction and
+    raises.
+    """
+    if fused and plan is not None:
+        raise ValueError(
+            "plan= belongs to the per-slot path; pass program= (or "
+            "nothing) for the fused path"
+        )
+    if fused is None:
+        fused = plan is None
+    if fused:
+        return decode_layout_fused(layout, buf_u8, program=program,
+                                   interpret=interpret)
     plan = plan if plan is not None else decode_plan(layout)
     words = buffer_to_u32(buf_u8)
+    wide = [s for s in plan.slots if s.width > 32]
     outs = {
         a.name: jnp.zeros(a.depth, dtype=jnp.uint32)
         for a in layout.problem.arrays
+        if a.width <= 32
     }
     for slot in plan.slots:
         if slot.width > 32:
-            raise NotImplementedError(
-                f"{slot.name}: widths > 32 use the numpy host path"
-            )
+            continue                    # host path below
         rows = jax.lax.slice(
             words, (slot.start_cycle, 0),
             (slot.start_cycle + slot.n_cycles, words.shape[1]),
@@ -67,4 +96,30 @@ def decode_layout(layout: Layout, buf_u8: np.ndarray | jax.Array, *,
         outs[slot.name] = jax.lax.dynamic_update_slice(
             outs[slot.name], codes, (slot.elem_base,)
         )
+    if wide:
+        outs.update(_decode_wide_slots_host(layout, buf_u8, wide))
+    return outs
+
+
+def _decode_wide_slots_host(layout: Layout, buf_u8, wide) -> dict:
+    """Numpy bit-gather for slots whose width exceeds the u32 kernel path."""
+    prob = layout.problem
+    row_bytes = prob.m // 8
+    buf = np.asarray(buf_u8, dtype=np.uint8)
+    padded = np.zeros((layout.c_max, row_bytes + 9), dtype=np.uint8)
+    padded[:, :row_bytes] = buf
+    outs: dict[str, np.ndarray] = {}
+    for slot in wide:
+        out = outs.setdefault(
+            slot.name,
+            np.zeros(prob.arrays[slot.array].depth, dtype=np.uint64))
+        rows = padded[slot.start_cycle:slot.start_cycle + slot.n_cycles]
+        vals = np.empty((slot.n_cycles, slot.lanes), dtype=np.uint64)
+        for k in range(slot.lanes):
+            vals[:, k] = _gather_bits(
+                rows, slot.bit_offset + k * slot.width, slot.width)
+        n = slot.lanes * slot.n_cycles
+        out[slot.elem_base:slot.elem_base + n] = vals.reshape(-1)
+    # stays numpy uint64: jnp would truncate to 32 bits under the default
+    # x64-disabled config
     return outs

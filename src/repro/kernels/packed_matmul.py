@@ -13,7 +13,9 @@ packed->dense expansion never touches HBM.
 
 Blocking: grid (M/bm, N/bn, K/bk), K innermost; a VMEM f32 accumulator
 carries partial sums across K steps.  bm/bn/bk default to MXU-aligned 128
-multiples; bk must be a multiple of the quantization group size.
+multiples; bk must be a multiple of the quantization group size.  M may
+be ragged (serving batch sizes are): activations are zero-padded up to
+the M tile internally and the padding sliced off the output.
 """
 from __future__ import annotations
 
@@ -93,10 +95,16 @@ def packed_matmul(x: jax.Array, w_packed: jax.Array, scales: jax.Array, *,
             f"K={k} must tile by block_k={block_k}, "
             f"block_k by group_size={group_size}"
         )
-    if m % block_m or n % block_n:
-        raise ValueError(f"M={m}, N={n} must tile by ({block_m}, {block_n})")
+    if n % block_n:
+        raise ValueError(f"N={n} must tile by block_n={block_n}")
+    # serving batches are ragged: pad activations up to the M tile and
+    # slice the padding back off the output (zero rows cost one tile at
+    # most and never perturb real rows)
+    m_pad = -(-m // block_m) * block_m
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
     n_k_steps = k // block_k
-    grid = (m // block_m, n // block_n, n_k_steps)
+    grid = (m_pad // block_m, n // block_n, n_k_steps)
 
     kernel = functools.partial(
         _packed_matmul_kernel,
@@ -106,7 +114,7 @@ def packed_matmul(x: jax.Array, w_packed: jax.Array, scales: jax.Array, *,
     )
     # pltpu.VMEM scratch works in interpret mode too (plain f32 buffer)
     scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -117,7 +125,8 @@ def packed_matmul(x: jax.Array, w_packed: jax.Array, scales: jax.Array, *,
                          lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
     )(x, w_packed, scales)
+    return out[:m] if m_pad != m else out

@@ -72,6 +72,15 @@ def main() -> None:
               f"scheduler runs={stack.scheduler_runs} "
               f"cache hits={stack.cache_hits}")
 
+        # compiled execution plan (one per layout signature, shared by
+        # every layer through the layout cache): the whole stream decodes
+        # with a single fused Pallas kernel per layer
+        prog = stack.exec_program()
+        print(f"exec program: pieces={prog.n_pieces}, "
+              f"kernel lanes={prog.kernel.lanes}, "
+              f"host-path arrays={len(prog.host_arrays)}, "
+              f"pallas calls/decode={prog.n_pallas_calls}")
+
     loop = ServeLoop(model, params, batch_size=args.batch_size,
                      max_seq=args.max_seq)
     for uid in range(args.requests):

@@ -131,6 +131,21 @@ class TestPackedMatmul:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-3)
 
+    @pytest.mark.parametrize("m", [1, 5, 37, 100])
+    def test_ragged_m_padded_internally(self, m):
+        """Serving batch sizes are ragged: M need not tile by block_m."""
+        spec = QuantSpec(bits=4, group_size=64)
+        w = jax.random.normal(jax.random.PRNGKey(6), (256, 128), jnp.float32)
+        qt = quantize(w, spec)
+        pw = pack_codes_u32(qt.codes, 4)
+        x = jax.random.normal(jax.random.PRNGKey(7), (m, 256), jnp.float32)
+        got = packed_matmul(x, pw, qt.scales, bits=4, group_size=64,
+                            block_m=64, block_k=128, interpret=True)
+        want = packed_matmul_ref(x, pw, qt.scales, bits=4, group_size=64)
+        assert got.shape == (m, 128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
     def test_bad_shapes_rejected(self):
         x = jnp.zeros((32, 256))
         pw = jnp.zeros((256 * 4 // 32, 128), jnp.uint32)
@@ -140,6 +155,10 @@ class TestPackedMatmul:
         with pytest.raises(ValueError):
             packed_matmul(x, jnp.zeros((3, 128), jnp.uint32), s, bits=4,
                           group_size=128, interpret=True)
+        # genuinely invalid N tiling still errors
+        with pytest.raises(ValueError):
+            packed_matmul(x, pw, jnp.ones((2, 128)), bits=4, group_size=128,
+                          block_n=96, interpret=True)
 
 
 # ----------------------------------------------------------------------
