@@ -78,7 +78,7 @@ def bench_example_layout() -> None:
 
 def bench_inv_helmholtz() -> None:
     from repro import api
-    from repro.core import INV_HELMHOLTZ, make_problem
+    from repro.api import INV_HELMHOLTZ, make_problem
 
     m = api.plan(INV_HELMHOLTZ, "homogeneous").metrics
     us = _timeit(lambda:
@@ -100,7 +100,7 @@ def bench_inv_helmholtz() -> None:
 
 def bench_matmul_widths() -> None:
     from repro import api
-    from repro.core import matmul_problem
+    from repro.api import matmul_problem
 
     for wa, wb in ((64, 64), (33, 31), (30, 19)):
         p = matmul_problem(wa, wb)
@@ -117,7 +117,8 @@ def bench_matmul_widths() -> None:
 def bench_decode_module() -> None:
     """Listing 2 analogue: decode units, staging and ports per layout."""
     from repro import api
-    from repro.core import PAPER_EXAMPLE, decode_plan, matmul_problem
+    from repro.api import PAPER_EXAMPLE, matmul_problem
+    from repro.core.codegen import decode_plan
 
     for label, prob in (("example", PAPER_EXAMPLE),
                         ("matmul_33x31", matmul_problem(33, 31))):
@@ -252,7 +253,8 @@ def bench_model_packing() -> None:
 
 def bench_scheduler_scale() -> None:
     # engine-level microbench: deliberately below the façade
-    from repro.core import make_problem, schedule
+    from repro.api import make_problem
+    from repro.core.iris import schedule
 
     rng = np.random.default_rng(0)
     for n_arrays, depth in ((8, 1000), (16, 10_000), (32, 100_000)):
@@ -279,7 +281,8 @@ def bench_scheduler_throughput() -> None:
         31 rebinds.
     """
     # engine-level microbench: deliberately below the façade
-    from repro.core import LayoutCache, make_problem, schedule, schedule_many
+    from repro.api import make_problem
+    from repro.core.iris import LayoutCache, schedule, schedule_many
 
     # (a) every task runs at its (capped) full rate -> long constant runs
     specs = [(f"a{i}", 8, 7_900_000 + 60_000 * i, 25_000 * i)

@@ -19,11 +19,7 @@ import numpy as np
 from repro import api
 from repro.configs import get_config
 from repro.models.model import Model
-from repro.models.quantized import (
-    bytes_per_token_report,
-    packed_decode_step,
-    quantize_params,
-)
+from repro.models.quantized import bytes_per_token_report, packed_decode_step
 from repro.quant import QuantSpec
 
 
@@ -43,7 +39,9 @@ def main() -> None:
 
     print(f"=== Quantize + pack ({args.bits}-bit, model {cfg.name} "
           f"reduced) ===")
-    pp = quantize_params(cfg, params, spec)
+    # the one front door: quantize -> plan -> pack, one call, one pytree
+    pp = api.pack_tree(cfg, params, spec, m=512)
+    print(pp.summary())
     rep = bytes_per_token_report(cfg, pp)
     print(f"weight stream per decode token: packed={rep['packed_MiB']:.2f} "
           f"MiB  padded-int={rep['padded_int_MiB']:.2f} MiB  "
@@ -78,6 +76,23 @@ def main() -> None:
         print(f"request {i}: {o}")
     print(f"\n{args.batch * args.new_tokens} tokens in {dt:.1f}s "
           f"(interpret-mode Pallas on CPU; TPU is the lowering target)")
+
+    print("\n=== Packed checkpoint (the HBM stream is the checkpoint) ===")
+    import pathlib
+    import tempfile
+
+    from repro.checkpoint.checkpoint import CheckpointManager
+
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep_n=1)
+        path = mgr.save_packed(0, pp)
+        pt2, _ = mgr.restore_packed()
+        same = all(
+            np.array_equal(np.asarray(pp.packed[k]), np.asarray(pt2.packed[k]))
+            for k in pp.packed)
+        size = sum(f.stat().st_size for f in pathlib.Path(path).iterdir())
+        print(f"restore bit-identical={same} layout={pt2.provenance} "
+              f"on-disk={size/2**20:.2f} MiB")
 
     # cross-check against the dense path for the first step
     state2 = model.init_decode_state(args.batch, max_seq=64)

@@ -1,31 +1,67 @@
 """Iris reproduction: automatic data layouts for high bandwidth utilization.
 
-``import repro`` is intentionally light (numpy only) and exposes the two
-things most consumers need: the :mod:`repro.api` pipeline façade and the
-curated core types.  The JAX/Pallas kernels, model zoo and launchers
-load lazily on first use (e.g. ``plan.decode(buf, backend="pallas")``).
+``import repro`` is intentionally light (numpy only) and exposes the one
+thing consumers need: the :mod:`repro.api` pipeline façade (including
+the pytree-level ``api.pack_tree`` / ``api.PackedTree`` front door).
+The JAX/Pallas kernels, model zoo and launchers load lazily on first use
+(e.g. ``plan.decode(buf, backend="pallas")``).
+
+The pre-façade top-level re-exports (``repro.schedule``,
+``repro.Layout``, ...) are kept alive for compatibility but emit a
+``DeprecationWarning`` naming the :mod:`repro.api` replacement; deeper
+module paths (``repro.core.iris.schedule`` etc.) remain stable,
+warning-free import targets.
 """
 from __future__ import annotations
 
+import importlib
+import warnings
+
 from . import api
-from .core import (
-    ALL_BASELINES,
-    DEFAULT_CACHE,
-    INV_HELMHOLTZ,
-    PAPER_EXAMPLE,
-    ArraySpec,
-    Layout,
-    LayoutCache,
-    LayoutMetrics,
-    LayoutProblem,
-    hls_padded_layout,
-    homogeneous_layout,
-    make_problem,
-    matmul_problem,
-    naive_layout,
-    schedule,
-    schedule_many,
-)
+
+#: deprecated top-level aliases: name -> (defining module, replacement)
+_DEPRECATED = {
+    # problem spec
+    "ArraySpec": ("repro.core.task", "repro.api.ArraySpec"),
+    "LayoutProblem": ("repro.core.task", "repro.api.LayoutProblem"),
+    "make_problem": ("repro.core.task", "repro.api.make_problem"),
+    "PAPER_EXAMPLE": ("repro.core.task", "repro.api.PAPER_EXAMPLE"),
+    "INV_HELMHOLTZ": ("repro.core.task", "repro.api.INV_HELMHOLTZ"),
+    "matmul_problem": ("repro.core.task", "repro.api.matmul_problem"),
+    # scheduler + cache
+    "schedule": ("repro.core.iris", "repro.api.plan(problem).layout"),
+    "schedule_many": ("repro.core.iris", "repro.api.plan_many"),
+    "LayoutCache": ("repro.core.iris", "repro.core.iris.LayoutCache"),
+    "DEFAULT_CACHE": ("repro.core.iris", "repro.core.iris.DEFAULT_CACHE"),
+    # layout IR & baselines
+    "Layout": ("repro.core.layout", "repro.core.layout.Layout"),
+    "LayoutMetrics": ("repro.core.layout",
+                      "repro.core.layout.LayoutMetrics"),
+    "naive_layout": ("repro.core.baselines",
+                     "repro.api.plan(problem, strategy='naive')"),
+    "homogeneous_layout": ("repro.core.baselines",
+                           "repro.api.plan(problem, "
+                           "strategy='homogeneous')"),
+    "hls_padded_layout": ("repro.core.baselines",
+                          "repro.api.plan(problem, "
+                          "strategy='hls_padded')"),
+    "ALL_BASELINES": ("repro.core.baselines", "repro.api.STRATEGIES"),
+}
+
+
+def __getattr__(name: str):
+    """Serve (and deprecate) the pre-façade compat aliases lazily."""
+    try:
+        mod_path, repl = _DEPRECATED[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        ) from None
+    warnings.warn(
+        f"repro.{name} is deprecated; use {repl}",
+        DeprecationWarning, stacklevel=2,
+    )
+    return getattr(importlib.import_module(mod_path), name)
 
 
 def _find_version() -> str:
@@ -56,13 +92,6 @@ __version__ = _find_version()
 
 __all__ = [
     "__version__", "api",
-    # problem spec
-    "ArraySpec", "LayoutProblem", "make_problem",
-    "PAPER_EXAMPLE", "INV_HELMHOLTZ", "matmul_problem",
-    # scheduler + cache
-    "schedule", "schedule_many", "LayoutCache", "DEFAULT_CACHE",
-    # layout IR & baselines
-    "Layout", "LayoutMetrics",
-    "naive_layout", "homogeneous_layout", "hls_padded_layout",
-    "ALL_BASELINES",
+    # deprecated compat aliases (DeprecationWarning on access)
+    *sorted(_DEPRECATED),
 ]

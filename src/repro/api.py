@@ -79,7 +79,22 @@ __all__ = [
     "STRATEGIES", "BACKENDS", "strategies", "backends",
     "plan", "plan_many", "compare", "plan_layer_stack",
     "ExecProgram", "lower_exec", "pack_compiled", "unpack_compiled",
+    # pytree-level front door (loads JAX lazily on first access)
+    "PackedTree", "pack_tree", "unpack_streams", "LayoutManifest",
 ]
+
+#: attributes served lazily from repro.tree so that ``import repro.api``
+#: stays numpy-only; the PackedTree machinery needs JAX (pytree
+#: registration, device placement)
+_TREE_EXPORTS = ("PackedTree", "pack_tree", "unpack_streams",
+                 "LayoutManifest")
+
+
+def __getattr__(name: str):
+    if name in _TREE_EXPORTS:
+        from . import tree as _tree
+        return getattr(_tree, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ----------------------------------------------------------------------
@@ -215,17 +230,31 @@ class Plan:
         self._metrics: LayoutMetrics | None = None
         self._decode_plan: DecodePlan | None = None
         self._exec_program: ExecProgram | None = None
+        self._provenance: str | None = None
 
     # -- lazy pipeline stages ------------------------------------------
     @property
     def layout(self) -> Layout:
         """The scheduled :class:`Layout` (computed on first access)."""
         if self._layout is None:
+            hits0 = self.cache.hits if self.cache is not None else 0
             self._layout = self._strategy_fn(
                 self.problem, mode=self.mode,
                 fill_residual=self.fill_residual, cache=self.cache,
             )
+            if self.strategy != "iris":
+                self._provenance = "closed-form"
+            elif self.cache is not None and self.cache.hits > hits0:
+                self._provenance = "cache-hit"
+            else:
+                self._provenance = "scheduled"
         return self._layout
+
+    @property
+    def provenance(self) -> str:
+        """Where the layout came from: ``"scheduled"``, ``"cache-hit"``
+        or ``"closed-form"`` (``"unscheduled"`` before first access)."""
+        return self._provenance or "unscheduled"
 
     @property
     def metrics(self) -> LayoutMetrics:
@@ -314,12 +343,25 @@ class Plan:
         """ASCII rendering in the style of the paper's Figs. 3-5."""
         return self.layout.render(max_cycles=max_cycles)
 
-    def __repr__(self) -> str:
-        state = "scheduled" if self._layout is not None else "unscheduled"
+    def summary(self) -> str:
+        """One-line report: strategy, size, B_eff, buffer bytes and cache
+        provenance (forces scheduling).  Used by serve.py's reporting."""
+        m = self.metrics
         return (
-            f"Plan({self.strategy!r}, m={self.problem.m}, "
-            f"n_arrays={len(self.problem.arrays)}, {state})"
+            f"Plan[{self.strategy}] m={self.problem.m}"
+            f" arrays={len(self.problem.arrays)}"
+            f" C_max={m.c_max} B_eff={m.efficiency:.4f}"
+            f" stream={self.stream_bytes / 2**10:.1f} KiB"
+            f" cache={self.provenance}"
         )
+
+    def __repr__(self) -> str:
+        if self._layout is None:
+            return (
+                f"Plan({self.strategy!r}, m={self.problem.m}, "
+                f"n_arrays={len(self.problem.arrays)}, unscheduled)"
+            )
+        return f"<{self.summary()}>"
 
 
 def plan(problem: LayoutProblem, strategy: str = "iris", *,
@@ -415,15 +457,20 @@ class LayerStackPlan:
 
 def plan_layer_stack(cfg, qspec, *, m: int = 4096,
                      n_layers: int | None = None, mode: str = "auto",
+                     strategy: str = "iris",
                      cache: LayoutCache | None = DEFAULT_CACHE,
                      ) -> LayerStackPlan:
     """Plan the per-layer weight-stream layouts for a model config.
 
     ``cfg`` is any object with ``d_model / d_ff / n_heads / n_kv_heads /
     head_dim`` (and ``n_layers`` unless passed explicitly); ``qspec`` is
-    the weight :class:`~repro.quant.qtypes.QuantSpec`.  Shared by
+    the weight :class:`~repro.quant.qtypes.QuantSpec`.  The internal
+    engine of :func:`pack_tree`, and shared by
     ``repro.launch.serve --packed`` and
-    :func:`repro.core.packing.serving_stream_report`.
+    :func:`repro.core.packing.serving_stream_report`.  Every layer of a
+    uniform stack poses the same scheduling instance: ``"iris"`` costs
+    one scheduler run (or zero on a warm cache) plus N-1 rebinds;
+    baseline strategies are closed-form and computed once outright.
     """
     from .core.packing import bundle_problem, layer_bundle_spec  # lazy
 
@@ -435,11 +482,20 @@ def plan_layer_stack(cfg, qspec, *, m: int = 4096,
         raise ValueError(f"n_layers must be positive, got {n}")
     local = cache if cache is not None else LayoutCache(maxsize=1)
     hits0, misses0 = local.hits, local.misses
-    layouts = schedule_many([prob] * n, mode=mode, cache=local)
+    if strategy == "iris":
+        layouts = schedule_many([prob] * n, mode=mode, cache=local)
+    else:
+        lay0 = plan(prob, strategy, mode=mode, cache=None).layout
+        layouts = [lay0] * n
     plans = []
-    for lay in layouts:
-        pl = Plan(prob, "iris", mode=mode, cache=local)
+    for i, lay in enumerate(layouts):
+        pl = Plan(prob, strategy, mode=mode, cache=local)
         pl._layout = lay
+        if strategy != "iris":
+            pl._provenance = "closed-form"
+        else:
+            pl._provenance = "cache-hit" if (i or local.misses == misses0) \
+                else "scheduled"
         plans.append(pl)
     # every layer shares the first layout's count runs; validating one
     # validates the stack (and catches scheduler regressions before any

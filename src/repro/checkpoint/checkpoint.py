@@ -32,6 +32,10 @@ from typing import Any
 import jax
 import numpy as np
 
+#: distinguishes "use the process-wide layout cache" from an explicit
+#: ``cache=None`` (restore without touching any cache)
+_DEFAULT_CACHE_SENTINEL = object()
+
 
 def _flatten(tree: Any):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -40,8 +44,43 @@ def _flatten(tree: Any):
 
 def _tree_paths(tree: Any) -> list[str]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                     for k in path) for path, _ in flat]
+    return ["/".join(str(getattr(k, "key",
+                                 getattr(k, "idx", getattr(k, "name", k))))
+            for k in path) for path, _ in flat]
+
+
+def _skeletonize(tree: Any) -> tuple[Any, list]:
+    """Replace every leaf with ``{"__leaf__": i}``; return (skeleton, leaves).
+
+    The skeleton is plain JSON (dict/list/None), so a checkpoint can
+    rebuild the exact tree structure without a ``like`` template — keys
+    containing ``/`` (e.g. ``"attn/bq"``) stay unambiguous, unlike
+    path-string encodings.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    counter = iter(range(len(leaves)))
+    skeleton = jax.tree_util.tree_unflatten(
+        treedef, [{"__leaf__": next(counter)} for _ in leaves])
+
+    def jsonify(node):
+        if isinstance(node, dict) and "__leaf__" in node:
+            return node
+        if isinstance(node, dict):
+            return {k: jsonify(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [jsonify(v) for v in node]
+        return node
+    return jsonify(skeleton), leaves
+
+
+def _unskeletonize(skeleton: Any, leaves: list) -> Any:
+    if isinstance(skeleton, dict) and "__leaf__" in skeleton:
+        return leaves[skeleton["__leaf__"]]
+    if isinstance(skeleton, dict):
+        return {k: _unskeletonize(v, leaves) for k, v in skeleton.items()}
+    if isinstance(skeleton, list):
+        return [_unskeletonize(v, leaves) for v in skeleton]
+    return skeleton
 
 
 class CheckpointManager:
@@ -178,3 +217,81 @@ class CheckpointManager:
                 out.append(jax.make_array_from_callback(
                     want_shape, shd, lambda idx, a=arr: np.asarray(a[idx])))
         return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+    # ------------------------------------------------------------------
+    # packed checkpoints: the HBM stream *is* the checkpoint
+    # ------------------------------------------------------------------
+    _PACKED_KEY = "packed_tree_manifest"
+    _SKELETON_KEY = "packed_tree_skeleton"
+
+    def save_packed(self, step: int, pt: Any,
+                    extra: dict | None = None) -> str:
+        """Save a :class:`repro.tree.PackedTree` — packed bytes only.
+
+        What hits disk is the per-layer unified Iris stream buffers
+        (exactly the bytes that live in HBM) plus the unquantized
+        leaves; dense weights are never materialized and the lane-packed
+        kernel views are not duplicated (restore regenerates them
+        bit-identically from the streams).  The tree's
+        :class:`~repro.tree.LayoutManifest` rides in the checkpoint
+        manifest JSON, so restore *rebinds* the layout instead of
+        re-scheduling.
+        """
+        if pt.streams is None:
+            raise ValueError(
+                "PackedTree was built with with_streams=False; packed "
+                "checkpointing needs the stream buffers"
+            )
+        payload = {
+            "streams": np.asarray(pt.streams),
+            "other": jax.tree.map(lambda x: np.asarray(x), pt.other),
+        }
+        skeleton, _ = _skeletonize(payload)
+        merged = dict(extra or {})
+        merged[self._PACKED_KEY] = pt.manifest.to_json_dict()
+        merged[self._SKELETON_KEY] = skeleton
+        return self.save(step, payload, merged)
+
+    def restore_packed(self, step: int | None = None, *,
+                       cache: Any = _DEFAULT_CACHE_SENTINEL,
+                       ) -> tuple[Any, dict]:
+        """Restore a :class:`repro.tree.PackedTree` from a packed save.
+
+        Mesh-free like :meth:`restore` (host numpy; re-place with
+        ``jax.device_put(pt, packed_tree_shardings(pt, mesh))``).  The
+        layout comes from the shared cache when warm (O(intervals)
+        rebind) or from the manifest's recorded count-intervals when
+        cold — the scheduler never runs; packed codes and scale bit
+        patterns are reconstructed bit-identically.  Returns
+        ``(PackedTree, extra)`` with the packed bookkeeping keys
+        stripped from ``extra``.
+        """
+        from repro.tree import LayoutManifest, unpack_streams
+
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self.root / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        extra = dict(manifest["extra"])
+        if self._PACKED_KEY not in extra:
+            raise ValueError(
+                f"step {step} is not a packed checkpoint; use restore()"
+            )
+        tree_manifest = LayoutManifest.from_json_dict(
+            extra.pop(self._PACKED_KEY))
+        skeleton = extra.pop(self._SKELETON_KEY)
+        leaves = []
+        for meta in manifest["leaves"]:
+            arr = np.load(d / meta["file"])
+            want_dtype = np.dtype(jax.numpy.dtype(meta["dtype"]))
+            if arr.dtype != want_dtype:
+                arr = arr.view(want_dtype)
+            leaves.append(arr)
+        payload = _unskeletonize(skeleton, leaves)
+        if cache is _DEFAULT_CACHE_SENTINEL:
+            from repro.core.iris import DEFAULT_CACHE
+            cache = DEFAULT_CACHE
+        pt = unpack_streams(tree_manifest, payload["streams"],
+                            payload["other"], cache=cache)
+        return pt, extra

@@ -1,63 +1,87 @@
 """The paper's primary contribution: the Iris bus-layout system.
 
-Curated public surface of the core package — problem spec, scheduler
-engine + layout cache, layout IR & metrics, the baseline layouts, and
-decode codegen.  Deeper module paths (``repro.core.iris`` etc.) remain
-stable import targets; prefer the :mod:`repro.api` façade for the
-end-to-end pipeline.
+Curated public surface of the core package: the *types* (problem spec,
+layout IR, program tables, registries) import eagerly and warning-free.
+The pre-façade *workflow entry points* (``schedule``, ``pack_arrays``,
+baseline constructors, ...) are kept alive for compatibility but emit a
+``DeprecationWarning`` naming the :mod:`repro.api` replacement — the
+façade is the front door for the end-to-end pipeline.  Deeper module
+paths (``repro.core.iris.schedule`` etc.) remain stable, warning-free
+import targets.
 """
-from .baselines import (
-    ALL_BASELINES,
-    hls_padded_layout,
-    homogeneous_layout,
-    naive_layout,
-)
-from .codegen import (
-    DecodePlan,
-    SlotPlan,
-    decode_plan,
-    emit_c_decode,
-    emit_c_pack,
-    pack_arrays,
-    random_codes,
-    unpack_arrays,
-)
-from .exec_plan import (
-    ExecProgram,
-    KernelTable,
-    lower_exec,
-    pack_compiled,
-    unpack_compiled,
-)
-from .iris import DEFAULT_CACHE, LayoutCache, schedule, schedule_many
+from __future__ import annotations
+
+import importlib
+import warnings
+
+from .codegen import DecodePlan, SlotPlan
+from .exec_plan import ExecProgram, KernelTable
+from .iris import LayoutCache
 from .layout import Counts, Interval, Layout, LayoutMetrics, Segment
 from .registry import Registry
-from .task import (
-    INV_HELMHOLTZ,
-    PAPER_EXAMPLE,
-    ArraySpec,
-    LayoutProblem,
-    make_problem,
-    matmul_problem,
-)
+from .task import ArraySpec, LayoutProblem
+
+#: deprecated workflow entry points: name -> (defining module, replacement)
+_DEPRECATED = {
+    # problem constructors / fixtures
+    "make_problem": ("repro.core.task", "repro.api.make_problem"),
+    "matmul_problem": ("repro.core.task", "repro.api.matmul_problem"),
+    "PAPER_EXAMPLE": ("repro.core.task", "repro.api.PAPER_EXAMPLE"),
+    "INV_HELMHOLTZ": ("repro.core.task", "repro.api.INV_HELMHOLTZ"),
+    # scheduler + cache singleton
+    "schedule": ("repro.core.iris", "repro.api.plan(problem).layout"),
+    "schedule_many": ("repro.core.iris", "repro.api.plan_many"),
+    "DEFAULT_CACHE": ("repro.core.iris", "repro.core.iris.DEFAULT_CACHE"),
+    # baselines
+    "naive_layout": ("repro.core.baselines",
+                     "repro.api.plan(problem, strategy='naive')"),
+    "homogeneous_layout": ("repro.core.baselines",
+                           "repro.api.plan(problem, "
+                           "strategy='homogeneous')"),
+    "hls_padded_layout": ("repro.core.baselines",
+                          "repro.api.plan(problem, "
+                          "strategy='hls_padded')"),
+    "ALL_BASELINES": ("repro.core.baselines", "repro.api.STRATEGIES"),
+    # codegen / execution
+    "decode_plan": ("repro.core.codegen", "repro.api.Plan.decode_plan"),
+    "pack_arrays": ("repro.core.codegen", "repro.api.Plan.pack"),
+    "unpack_arrays": ("repro.core.codegen",
+                      "repro.api.Plan.decode(buf, backend='numpy')"),
+    "emit_c_pack": ("repro.core.codegen",
+                    "repro.api.Plan.emit(target='c', artifact='pack')"),
+    "emit_c_decode": ("repro.core.codegen",
+                      "repro.api.Plan.emit(target='c')"),
+    "random_codes": ("repro.core.codegen", "repro.api.random_codes"),
+    "lower_exec": ("repro.core.exec_plan", "repro.api.Plan.exec_program"),
+    "pack_compiled": ("repro.core.exec_plan",
+                      "repro.api.Plan.pack(compiled=True)"),
+    "unpack_compiled": ("repro.core.exec_plan",
+                        "repro.api.Plan.decode(buf, backend='numpy')"),
+}
+
+
+def __getattr__(name: str):
+    """Serve (and deprecate) the pre-façade workflow aliases lazily."""
+    try:
+        mod_path, repl = _DEPRECATED[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        ) from None
+    warnings.warn(
+        f"repro.core.{name} is deprecated; use {repl}",
+        DeprecationWarning, stacklevel=2,
+    )
+    return getattr(importlib.import_module(mod_path), name)
+
 
 __all__ = [
-    # problem spec
-    "ArraySpec", "LayoutProblem", "make_problem",
-    "PAPER_EXAMPLE", "INV_HELMHOLTZ", "matmul_problem",
-    # scheduler + cache
-    "schedule", "schedule_many", "LayoutCache", "DEFAULT_CACHE",
-    # layout IR & metrics
+    # problem spec & layout IR (stable types)
+    "ArraySpec", "LayoutProblem",
     "Layout", "LayoutMetrics", "Interval", "Segment", "Counts",
-    # baselines
-    "naive_layout", "homogeneous_layout", "hls_padded_layout",
-    "ALL_BASELINES",
-    # codegen
-    "DecodePlan", "SlotPlan", "decode_plan", "pack_arrays",
-    "unpack_arrays", "emit_c_pack", "emit_c_decode", "random_codes",
-    # compiled execution plans
-    "ExecProgram", "KernelTable", "lower_exec", "pack_compiled",
-    "unpack_compiled",
-    # registries
-    "Registry",
+    "LayoutCache",
+    # program tables & registries (stable types)
+    "DecodePlan", "SlotPlan", "ExecProgram", "KernelTable", "Registry",
+    # deprecated workflow entry points (DeprecationWarning on access)
+    *sorted(_DEPRECATED),
 ]

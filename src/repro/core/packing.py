@@ -146,6 +146,29 @@ def bundle_problem(bundle: list[BundleTensor], m: int = 4096,
     return LayoutProblem(m=m, arrays=tuple(arrays))
 
 
+def pad_bundle_elements(prob: LayoutProblem, prog: ExecProgram,
+                        data: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Flatten + zero-pad per-tensor element data up to whole scheduling
+    units (``prog.piece_depths``), ready for :func:`pack_compiled`.
+
+    Shared by :func:`pack_bundle` and ``repro.tree.pack_tree`` — the one
+    place bundle element streams meet the compiled pack program.
+    """
+    padded: dict[str, np.ndarray] = {}
+    for i, spec in enumerate(prob.arrays):
+        vals = np.asarray(data[spec.name]).reshape(-1).astype(np.uint64)
+        pad = prog.piece_depths[i] - vals.shape[0]
+        if pad < 0:
+            raise ValueError(
+                f"{spec.name}: {vals.shape[0]} elements exceed the "
+                f"scheduled capacity {prog.piece_depths[i]}"
+            )
+        if pad:
+            vals = np.pad(vals, (0, pad))
+        padded[spec.name] = vals
+    return padded
+
+
 def pack_bundle(bundle: list[BundleTensor], m: int = 4096,
                 data: dict[str, np.ndarray] | None = None,
                 mode: str = "auto",
@@ -171,14 +194,8 @@ def pack_bundle(bundle: list[BundleTensor], m: int = 4096,
     prog = lower_exec(lay, elem_widths=ew)
     buf = None
     if data is not None:
-        padded = {}
-        for i, spec in enumerate(prob.arrays):
-            vals = np.asarray(data[spec.name]).reshape(-1).astype(np.uint64)
-            pad = prog.piece_depths[i] - vals.shape[0]
-            if pad:
-                vals = np.pad(vals, (0, pad))
-            padded[spec.name] = vals
-        buf = pack_compiled(lay, padded, program=prog)
+        buf = pack_compiled(lay, pad_bundle_elements(prob, prog, data),
+                            program=prog)
     baselines = api.compare(prob, strategies=("homogeneous", "hls_padded"))
     return PackedBundle(
         problem=prob,

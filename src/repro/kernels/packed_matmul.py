@@ -30,6 +30,12 @@ try:  # pltpu is importable on CPU for scratch-shape declarations
 except ImportError:  # pragma: no cover
     pltpu = None
 
+#: element widths the lane-packed kernel path supports: the funnel shift
+#: needs a whole number of lanes per uint32 word (32 % bits == 0).  The
+#: serving CLI (`launch.serve --bits`) and `api.pack_tree` validate
+#: against this set up front instead of erroring inside the kernel.
+SUPPORTED_BITS = (2, 4, 8)
+
 
 def _packed_matmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
                           bits: int, group_size: int, n_k_steps: int) -> None:
@@ -80,6 +86,11 @@ def packed_matmul(x: jax.Array, w_packed: jax.Array, scales: jax.Array, *,
               (see ``quant.pack_codes_u32``)
     scales:   (K // group_size, N)
     """
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(
+            f"packed_matmul supports bits in {sorted(SUPPORTED_BITS)}; "
+            f"got {bits}"
+        )
     m, k = x.shape
     lanes = 32 // bits
     kw, n = w_packed.shape

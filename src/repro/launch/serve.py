@@ -3,11 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --reduced --requests 6 --batch-size 2 --max-new 8 [--packed --bits 8]
 
-`--packed` serves through the quantized dequant-on-load path
-(models/quantized.py) for dense-family archs, prints the weight-stream
-bytes-per-token comparison, and plans the per-layer Iris stream layouts
-through the shared layout cache (one scheduler run for the whole uniform
-stack; repeated requests with the same shapes never re-run the scheduler).
+`--packed` serves through the quantized dequant-on-load path for
+dense-family archs.  All pack/plan wiring goes through the one front
+door — ``repro.api.pack_tree`` — which quantizes the weights, plans the
+per-layer Iris stream layouts through the shared layout cache (one
+scheduler run for the whole uniform stack; repeated requests with the
+same shapes never re-run the scheduler) and packs the unified per-layer
+HBM stream buffers.  The report prints the weight-stream bytes-per-token
+comparison plus the one-line `Plan`/`PackedTree` summaries.
 """
 from __future__ import annotations
 
@@ -15,6 +18,8 @@ import argparse
 
 import jax
 import numpy as np
+
+from repro.kernels.packed_matmul import SUPPORTED_BITS
 
 
 def main() -> None:
@@ -26,7 +31,12 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--packed", action="store_true")
-    ap.add_argument("--bits", type=int, default=8)
+    # validated at argparse time against what QuantSpec + packed_matmul
+    # actually support, instead of erroring deep inside the kernel path
+    ap.add_argument("--bits", type=int, default=8,
+                    choices=sorted(SUPPORTED_BITS),
+                    help="quantization width for --packed "
+                         f"(supported: {sorted(SUPPORTED_BITS)})")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,40 +52,30 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
 
     if args.packed:
-        from repro.models.quantized import (
-            bytes_per_token_report,
-            quantizable,
-            quantize_params,
-        )
+        from repro import api
+        from repro.models.quantized import bytes_per_token_report, quantizable
         from repro.quant import QuantSpec
 
         if not quantizable(cfg):
             raise SystemExit(f"{cfg.name}: packed path covers dense archs")
         qspec = QuantSpec(bits=args.bits, group_size=32)
-        pp = quantize_params(cfg, params, qspec)
-        rep = bytes_per_token_report(cfg, pp)
+
+        # the one front door: quantize -> plan (cached) -> pack streams
+        pt = api.pack_tree(cfg, params, qspec)
+        rep = bytes_per_token_report(cfg, pt)
         print(f"weight stream/token: packed={rep['packed_MiB']:.2f} MiB "
               f"padded-int={rep['padded_int_MiB']:.2f} "
               f"bf16={rep['bf16_MiB']:.2f} "
               f"({rep['bf16_MiB']/rep['packed_MiB']:.2f}x reduction)")
-
-        # plan the per-layer Iris stream layouts through the façade: every
-        # layer of a uniform stack is the same scheduling instance, so the
-        # scheduler runs once and each further layer — and each repeated
-        # request with the same shapes — is a cache hit
-        from repro import api
-
-        stack = api.plan_layer_stack(cfg, qspec)
-        print(f"iris stream plan: {stack.n_layers} layers, "
-              f"C_max={stack.c_max_per_layer}/layer, "
-              f"B_eff={stack.b_eff:.4f}, "
-              f"scheduler runs={stack.scheduler_runs} "
-              f"cache hits={stack.cache_hits}")
+        print(pt.summary())
+        # per-layer plan summary: the shared cache answers by signature,
+        # so this never re-runs the scheduler
+        print(api.plan(pt.manifest.problem()).summary())
 
         # compiled execution plan (one per layout signature, shared by
         # every layer through the layout cache): the whole stream decodes
         # with a single fused Pallas kernel per layer
-        prog = stack.exec_program()
+        prog = pt.exec_program()
         print(f"exec program: pieces={prog.n_pieces}, "
               f"kernel lanes={prog.kernel.lanes}, "
               f"host-path arrays={len(prog.host_arrays)}, "

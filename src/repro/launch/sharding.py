@@ -184,3 +184,49 @@ def decode_state_shardings(state_shape: Any, mesh: Mesh, *,
 def shardings_to_specs(tree: Any) -> Any:
     return jax.tree.map(lambda s: s.spec, tree,
                         is_leaf=lambda x: isinstance(x, NamedSharding))
+
+
+# ----------------------------------------------------------------------
+# PackedTree placement
+# ----------------------------------------------------------------------
+def packed_tree_shardings(pt: Any, mesh: Mesh) -> Any:
+    """NamedShardings for a :class:`repro.tree.PackedTree`.
+
+    Because a ``PackedTree`` is a registered pytree, placement is just
+    another tree of the same structure — no packed-state special-casing
+    at call sites: ``jax.device_put(pt, packed_tree_shardings(pt, mesh))``.
+
+    Rules: lane-packed codes and scales are tensor-parallel on the
+    output (N) dimension over ``'model'`` when it divides; the unified
+    stream buffers shard their layer dimension over the DP axes when it
+    divides (each host streams its layers) and replicate otherwise;
+    ``other`` leaves follow :func:`leaf_partition_spec` for embeddings
+    and replicate the per-layer norm/bias vectors.
+    """
+    from repro.tree import PackedTree  # lazy: keeps module JAX-only
+
+    def tp_n(x) -> NamedSharding:
+        # (n_layers, K', N): shard only the last (output) dim
+        spec = [None] * (x.ndim - 1) + [_maybe("model", x.shape[-1], mesh)]
+        return NamedSharding(mesh, P(*spec))
+
+    def other_spec(path, leaf) -> NamedSharding:
+        name = _path_str(path)
+        base = name.rsplit("/", 1)[-1]
+        if base in ("embed", "unembed") and leaf.ndim >= 2:
+            return NamedSharding(
+                mesh, leaf_partition_spec(path, leaf, mesh, fsdp=False))
+        return NamedSharding(mesh, P())     # norms/biases: replicated
+
+    streams = None
+    if pt.streams is not None:
+        dp = dp_axes(mesh)
+        lead = dp if _fits(pt.streams.shape[0], mesh, dp) else None
+        streams = NamedSharding(mesh, P(lead, None, None))
+    return PackedTree(
+        packed={k: tp_n(v) for k, v in pt.packed.items()},
+        scales={k: tp_n(v) for k, v in pt.scales.items()},
+        other=jax.tree_util.tree_map_with_path(other_spec, pt.other),
+        streams=streams,
+        manifest=pt.manifest,
+    )

@@ -2,55 +2,38 @@
 
 End-to-end instantiation of the paper for LM serving (dense-family archs):
 
-1. every per-layer weight matrix is quantized to intN (group scales);
-2. codes are stored lane-packed in uint32 (``quant.pack_codes_u32``) — the
-   *bytes that live in HBM*;
-3. an Iris layout orders each layer's bundle into one unified stream (the
-   storage/DMA order; ``core.packing``), replacing 9+ per-tensor buffers
-   with one dense stream per layer;
-4. ``decode_step`` consumes the packed codes directly via the
-   dequant-on-load Pallas matmul (``kernels.packed_matmul``) — dense bf16
-   weights never exist in memory.
+1. ``repro.api.pack_tree`` quantizes every per-layer weight matrix to
+   intN (group scales), plans the per-layer Iris stream layout and packs
+   both the unified HBM stream buffers and the lane-packed uint32 kernel
+   views into one :class:`~repro.tree.PackedTree` pytree;
+2. ``packed_decode_step`` consumes the tree's kernel views directly via
+   the dequant-on-load Pallas matmul (``kernels.packed_matmul``) — dense
+   bf16 weights never exist in memory.
 
-``quantize_params`` / ``packed_decode_step`` are exercised by
-examples/packed_serving.py and tests/test_quantized_serving.py, with
-bytes-moved accounting vs the bf16 and padded-int baselines.
+This module owns only the *decode math*; all pack/plan wiring lives
+behind ``repro.api.pack_tree``.  ``PackedParams`` and
+``quantize_params`` survive as deprecated aliases of the new surface.
+Exercised by examples/packed_serving.py and
+tests/test_quantized_serving.py, with bytes-moved accounting vs the bf16
+and padded-int baselines.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
+import warnings
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.tree import PackedTree
+
 from repro.configs.base import ModelConfig
 from repro.kernels.packed_matmul import packed_matmul
-from repro.quant.qtypes import QuantSpec, pack_codes_u32, quantize
+from repro.quant.qtypes import QuantSpec
 
 from .layers import activation, apply_norm, rope_freqs
 from .transformer import n_periods, period_template
-
-#: weight names quantized in a dense decoder sublayer
-_QUANT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
-
-
-@dataclasses.dataclass
-class PackedParams:
-    """Quantized model params: packed codes + scales + small bf16 leaves."""
-
-    packed: dict              # name -> (n_periods, K*bits/32, N) uint32
-    scales: dict              # name -> (n_periods, K/G, N)
-    other: dict               # embed, norms, biases (unquantized)
-    spec: QuantSpec
-    shapes: dict              # name -> (K, N)
-
-    def hbm_bytes(self) -> int:
-        b = sum(int(x.size) * 4 for x in self.packed.values())
-        b += sum(int(x.size) * 2 for x in self.scales.values())
-        b += sum(int(x.size) * x.dtype.itemsize
-                 for x in jax.tree.leaves(self.other))
-        return b
 
 
 def quantizable(cfg: ModelConfig) -> bool:
@@ -60,40 +43,31 @@ def quantizable(cfg: ModelConfig) -> bool:
             and not t[0].cross)
 
 
-def quantize_params(cfg: ModelConfig, params: dict,
-                    spec: QuantSpec) -> PackedParams:
-    if not quantizable(cfg):
-        raise NotImplementedError(
-            f"packed decode path supports dense archs; {cfg.name} has "
-            f"template {period_template(cfg)}")
-    blocks = params["blocks"][0]
-    packed: dict[str, Any] = {}
-    scales: dict[str, Any] = {}
-    shapes: dict[str, Any] = {}
-    other: dict[str, Any] = {
-        "embed": params["embed"],
-        "final_norm": params["final_norm"],
-        "norm1": blocks["norm1"],
-        "norm2": blocks["norm2"],
-    }
-    if "unembed" in params:
-        other["unembed"] = params["unembed"]
-    for sub in ("attn", "mlp"):
-        for name, w in blocks[sub].items():
-            if name in _QUANT_NAMES:
-                k = f"{sub}/{name}"
+def quantize_params(cfg: ModelConfig, params: dict, spec: QuantSpec):
+    """Deprecated: use :func:`repro.api.pack_tree`.
 
-                def qpack(wl, spec=spec):
-                    qt = quantize(wl, spec)
-                    return (pack_codes_u32(qt.codes, spec.bits), qt.scales)
+    Thin wrapper kept for pre-``PackedTree`` callers; returns a
+    :class:`~repro.tree.PackedTree` (field-compatible with the old
+    ``PackedParams``: ``.packed`` / ``.scales`` / ``.other`` / ``.spec``
+    / ``.shapes``), built without stream buffers.
+    """
+    warnings.warn(
+        "quantize_params is deprecated; use repro.api.pack_tree(cfg, "
+        "params, spec), which also plans and packs the Iris stream "
+        "buffers", DeprecationWarning, stacklevel=2,
+    )
+    from repro import api
 
-                pk, sc = jax.vmap(qpack)(w)      # over the period dim
-                packed[k], scales[k] = pk, sc
-                shapes[k] = tuple(w.shape[1:])
-            else:                                 # biases stay dense
-                other[f"{sub}/{name}"] = w
-    return PackedParams(packed=packed, scales=scales, other=other,
-                        spec=spec, shapes=shapes)
+    return api.pack_tree(cfg, params, spec, with_streams=False)
+
+
+def __getattr__(name: str):
+    if name == "PackedParams":
+        # deprecated alias of the pytree front door
+        from repro.tree import _warn_packed_params
+
+        return _warn_packed_params()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _pmm(x2d, pw, sc, spec, interpret):
@@ -111,12 +85,14 @@ def _pmm(x2d, pw, sc, spec, interpret):
     return out[:b]
 
 
-def packed_decode_step(cfg: ModelConfig, pp: PackedParams, state: dict,
+def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
                        tokens: jax.Array, *, interpret: bool = True
                        ) -> tuple[jax.Array, dict]:
     """One decode token with dequant-on-load weights (dense archs).
 
-    Mirrors Model.decode_step but every large matmul reads packed codes.
+    ``pp`` is the :class:`~repro.tree.PackedTree` built by
+    ``repro.api.pack_tree``.  Mirrors Model.decode_step but every large
+    matmul reads packed codes.
     """
     from . import attention as attn
 
@@ -185,7 +161,7 @@ def packed_decode_step(cfg: ModelConfig, pp: PackedParams, state: dict,
     return logits, new_state
 
 
-def bytes_per_token_report(cfg: ModelConfig, pp: PackedParams) -> dict:
+def bytes_per_token_report(cfg: ModelConfig, pp: "PackedTree") -> dict:
     """Weight bytes streamed per decode token: packed vs baselines."""
     n_elems = sum(int(jnp.prod(jnp.array(s)) * n_periods(cfg))
                   for s in pp.shapes.values())

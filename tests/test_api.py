@@ -7,7 +7,8 @@ import pytest
 
 import repro
 from repro import api
-from repro.core import LayoutCache, make_problem
+from repro.api import make_problem
+from repro.core import LayoutCache
 
 # The three acceptance problems: the paper §4 worked example, a
 # non-power-of-two-width problem, and a lane-capped bundle-style problem.
@@ -85,7 +86,7 @@ def test_duplicate_registration_rejected():
 
 
 def test_custom_strategy_registers_and_plans():
-    from repro.core import naive_layout
+    from repro.core.baselines import naive_layout
 
     api.STRATEGIES.register(
         "reversed_naive",
@@ -116,7 +117,7 @@ def test_plan_is_lazy_and_memoized():
 
 def test_plan_routes_through_shared_cache_by_default():
     p = make_problem(32, [("x", 3, 50, 5), ("y", 7, 30, 9)])
-    from repro.core import DEFAULT_CACHE
+    from repro.core.iris import DEFAULT_CACHE
 
     api.plan(p).layout
     h0 = DEFAULT_CACHE.hits
@@ -225,19 +226,37 @@ def test_old_import_paths_still_resolve():
         matmul_problem,
     )
 
-    # curated exports alias the originals, not copies
-    assert repro.core.schedule is schedule
-    assert repro.schedule is schedule
-    assert repro.core.PAPER_EXAMPLE is PAPER_EXAMPLE
+    # curated exports alias the originals, not copies — and the
+    # pre-façade compat aliases now warn, naming the repro.api
+    # replacement, while still resolving to the same object
+    with pytest.deprecated_call(match="repro.api"):
+        assert repro.core.schedule is schedule
+    with pytest.deprecated_call(match="repro.api"):
+        assert repro.schedule is schedule
+    with pytest.deprecated_call(match="repro.api.PAPER_EXAMPLE"):
+        assert repro.core.PAPER_EXAMPLE is PAPER_EXAMPLE
+
+
+def test_deprecated_packed_params_alias():
+    """`PackedParams` warns, names the replacement, and still works."""
+    with pytest.deprecated_call(match="repro.api.PackedTree"):
+        from repro.models.quantized import PackedParams
+    assert PackedParams is api.PackedTree
 
 
 def test_curated_all_exports_resolve():
-    for name in repro.core.__all__:
-        assert getattr(repro.core, name) is not None
-    for name in repro.__all__:
-        assert getattr(repro, name) is not None
-    for name in api.__all__:
-        assert getattr(api, name) is not None
+    import warnings
+
+    with warnings.catch_warnings():
+        # the compat aliases in __all__ warn by design; they must still
+        # all resolve
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for name in repro.core.__all__:
+            assert getattr(repro.core, name) is not None
+        for name in repro.__all__:
+            assert getattr(repro, name) is not None
+        for name in api.__all__:
+            assert getattr(api, name) is not None
 
 
 def test_version_sourced_from_pyproject():

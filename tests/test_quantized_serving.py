@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.configs import get_config
 from repro.core.packing import pack_bundle, layer_bundle_spec
 from repro.models.model import Model
@@ -11,9 +12,13 @@ from repro.models.quantized import (
     bytes_per_token_report,
     packed_decode_step,
     quantizable,
-    quantize_params,
 )
 from repro.quant import QuantSpec
+
+
+def quantize_params(cfg, params, spec):
+    """All pack/plan wiring goes through the one front door."""
+    return api.pack_tree(cfg, params, spec, with_streams=False)
 
 
 @pytest.fixture(scope="module")
