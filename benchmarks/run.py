@@ -18,6 +18,10 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
                            writes machine-readable BENCH_exec.json at the
                            repo root and exits nonzero if the compiled
                            paths are not bit-identical to the legacy ones
+  bench_stream_matmul    — stream-direct matmul (decode fused into the
+                           compute prologue) vs the two-pass path on the
+                           int3 LM layer bundle; writes
+                           BENCH_stream_mm.json (see bench_stream_mm.py)
 
 CLI:  python benchmarks/run.py [--quick] [--only SUBSTR]
 """
@@ -456,6 +460,17 @@ def bench_exec() -> None:
         )
 
 
+def bench_stream_matmul() -> None:
+    """Stream-direct vs two-pass serving on the int3 LM layer bundle
+    (full bench in bench_stream_mm.py; writes BENCH_stream_mm.json)."""
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from bench_stream_mm import run as _stream_mm_run
+
+    _stream_mm_run(quick=QUICK)
+
+
 ALL = [
     bench_example_layout,
     bench_inv_helmholtz,
@@ -469,6 +484,7 @@ ALL = [
     bench_scheduler_scale,
     bench_scheduler_throughput,
     bench_exec,
+    bench_stream_matmul,
 ]
 
 

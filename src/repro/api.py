@@ -56,8 +56,10 @@ from .core.codegen import (
 )
 from .core.exec_plan import (
     ExecProgram,
+    StreamTables,
     lower_exec,
     pack_compiled,
+    stream_matmul_tables,
     unpack_compiled,
 )
 from .core.iris import DEFAULT_CACHE, LayoutCache, schedule, schedule_many
@@ -79,6 +81,7 @@ __all__ = [
     "STRATEGIES", "BACKENDS", "strategies", "backends",
     "plan", "plan_many", "compare", "plan_layer_stack",
     "ExecProgram", "lower_exec", "pack_compiled", "unpack_compiled",
+    "StreamTables", "stream_matmul_tables",
     # pytree-level front door (loads JAX lazily on first access)
     "PackedTree", "pack_tree", "unpack_streams", "LayoutManifest",
 ]
@@ -231,6 +234,7 @@ class Plan:
         self._decode_plan: DecodePlan | None = None
         self._exec_program: ExecProgram | None = None
         self._provenance: str | None = None
+        self._stream_tables: dict = {}
 
     # -- lazy pipeline stages ------------------------------------------
     @property
@@ -332,6 +336,58 @@ class Plan:
                 f"backend {target!r} cannot emit source; use one of {can}"
             )
         return b.emit(self, **kw)
+
+    # -- stream-direct execution ----------------------------------------
+    def stream_tables(self, weights: int | str, shape: tuple[int, int], *,
+                      scales: int | str, group_size: int,
+                      elem_widths: tuple[int, ...] | None = None,
+                      ) -> StreamTables:
+        """Bit-offset tables for one ``(K, N)`` stream-direct matmul.
+
+        Memoized per (operands, shape, granularity) — serving calls hit
+        the table once per weight matrix, not per token.
+        """
+        key = (weights, scales, shape, group_size, elem_widths)
+        tabs = self._stream_tables.get(key)
+        if tabs is None:
+            prog = self.exec_program if elem_widths is None \
+                else lower_exec(self.layout, elem_widths=elem_widths)
+            tabs = stream_matmul_tables(
+                self.layout, weights, shape, scales=scales,
+                group_size=group_size, program=prog)
+            self._stream_tables[key] = tabs
+        return tabs
+
+    def matmul_direct(self, x, buf, weights: int | str,
+                      shape: tuple[int, int], *, scales: int | str,
+                      group_size: int,
+                      elem_widths: tuple[int, ...] | None = None,
+                      interpret: bool = True, **block_kw):
+        """``x @ dequant(weights)`` straight out of the packed stream.
+
+        The stream-direct exec surface: no dense intermediate ever
+        materializes — the Pallas matmul prologue gathers packed words
+        from ``buf`` against this plan's slot tables
+        (:mod:`repro.kernels.stream_matmul`).  ``buf`` is the packed
+        ``(c_max, m/8)`` uint8 buffer (or a precomputed uint32 stream
+        from :func:`repro.kernels.stream_matmul.stream_words`).
+        """
+        import jax.numpy as jnp  # lazy: pulls in JAX
+
+        from .kernels.stream_matmul import stream_matmul, stream_words
+
+        tabs = self.stream_tables(weights, shape, scales=scales,
+                                  group_size=group_size,
+                                  elem_widths=elem_widths)
+        buf = np.asarray(buf) if not hasattr(buf, "dtype") else buf
+        if buf.dtype == np.uint8:
+            prog = self.exec_program if elem_widths is None \
+                else lower_exec(self.layout, elem_widths=elem_widths)
+            buf = stream_words(prog, np.asarray(buf))
+        return stream_matmul(x, buf, jnp.asarray(tabs.w_tab),
+                             jnp.asarray(tabs.s_tab), bits=tabs.bits,
+                             group_size=group_size, interpret=interpret,
+                             **block_kw)
 
     # -- conveniences ---------------------------------------------------
     def validate(self) -> "Plan":
@@ -453,6 +509,55 @@ class LayerStackPlan:
         layout signature, hence one program (cached on the layout)."""
         ew = tuple(b.width_bits for b in self.bundle)
         return lower_exec(self.plans[0].layout, elem_widths=ew)
+
+    def stream_tables(self, name: str,
+                      shape: tuple[int, int]) -> StreamTables:
+        """Stream-direct matmul tables for bundle tensor ``name``.
+
+        Resolves the paired ``{name}_scales`` tensor and derives the
+        quantization group size from the bundle element counts, so
+        callers hand in only the weight name and its ``(K, N)`` shape.
+        All layers share the tables (one layout signature).
+        """
+        by_name = {b.name: b for b in self.bundle}
+        if name not in by_name:
+            raise KeyError(f"no bundle tensor named {name!r}")
+        sname = f"{name}_scales"
+        if sname not in by_name:
+            raise KeyError(f"bundle tensor {name!r} has no paired scales")
+        w, s = by_name[name], by_name[sname]
+        k, n = shape
+        if k * n != w.n_elems:
+            raise ValueError(
+                f"{name}: shape {shape} has {k * n} elements, bundle "
+                f"holds {w.n_elems}"
+            )
+        if w.n_elems % s.n_elems:
+            raise ValueError(
+                f"{name}: scale count {s.n_elems} does not divide "
+                f"weight count {w.n_elems}"
+            )
+        group_size = w.n_elems // s.n_elems
+        ew = tuple(b.width_bits for b in self.bundle)
+        return self.plans[0].stream_tables(
+            name, shape, scales=sname, group_size=group_size,
+            elem_widths=ew)
+
+    def matmul_direct(self, x, buf, name: str, shape: tuple[int, int], *,
+                      interpret: bool = True, **block_kw):
+        """Stream-direct ``x @ dequant(name)`` against one layer's buffer.
+
+        ``buf`` is that layer's packed stream (uint8 rows or a
+        precomputed uint32 word stream).  Any bundle element width <= 32
+        works — including the widths ``packed_matmul`` cannot lane-pack.
+        """
+        tabs = self.stream_tables(name, shape)
+        group_size = tabs.group_size
+        ew = tuple(b.width_bits for b in self.bundle)
+        return self.plans[0].matmul_direct(
+            x, buf, name, shape, scales=f"{name}_scales",
+            group_size=group_size, elem_widths=ew, interpret=interpret,
+            **block_kw)
 
 
 def plan_layer_stack(cfg, qspec, *, m: int = 4096,

@@ -195,6 +195,101 @@ class ExecProgram:
         padded[:, :self.row_bytes] = np.asarray(buf, dtype=np.uint8)
         return padded.view(np.uint32)
 
+    def stream_bit_offsets(self, i: int) -> np.ndarray:
+        """Global bit offset of each of array ``i``'s pieces, in the
+        flattened :meth:`buffer_words32` view.
+
+        The u64 pack view pads each row to ``wpr * 8`` bytes while the
+        u32 kernel view pads to ``words32 * 4``, so offsets must be
+        rebuilt from (row, bit-within-row) rather than scaled from the
+        u64 word index.  Returned as uint32 — one table entry addresses
+        up to 2^32 stream bits (512 MiB), validated here.
+        """
+        lo, hi = self.piece_base[i], self.piece_base[i + 1]
+        w = self.word[lo:hi].astype(np.int64)
+        row, w_in_row = np.divmod(w, self.wpr)
+        gbit = (row * (self.kernel.words32 * 32)
+                + w_in_row * 64 + self.shift[lo:hi].astype(np.int64))
+        if gbit.size and int(gbit.max()) + self.elem_widths[i] > (1 << 32):
+            raise ValueError(
+                "stream exceeds the 2^32-bit addressing range of the "
+                "uint32 stream tables"
+            )
+        return gbit.astype(np.uint32)
+
+
+@dataclasses.dataclass(eq=False)
+class StreamTables:
+    """Per-matmul operand tables for the stream-direct kernel.
+
+    ``w_tab[kk, nn]`` / ``s_tab[gg, nn]`` hold the *global bit offset*
+    (u32-word view, :meth:`ExecProgram.stream_bit_offsets`) of weight
+    code ``(kk, nn)`` and scale ``(gg, nn)`` inside the packed stream.
+    The kernel derives word index (``tab >> 5``) and shift (``tab & 31``)
+    in registers; element width is static per operand (``bits`` / 16).
+    """
+
+    bits: int
+    group_size: int
+    w_tab: np.ndarray            # (K, N) uint32
+    s_tab: np.ndarray            # (K // group_size, N) uint32
+
+
+def stream_matmul_tables(layout: Layout, weights: int | str,
+                         shape: tuple[int, int], *,
+                         scales: int | str, group_size: int,
+                         elem_widths: tuple[int, ...] | None = None,
+                         program: ExecProgram | None = None,
+                         ) -> StreamTables:
+    """Build :class:`StreamTables` for one ``(K, N)`` weight matrix.
+
+    ``weights`` / ``scales`` name (or index) the layout arrays holding
+    the row-major flattened weight codes and bf16 scale bit patterns —
+    the flattening convention of ``repro.tree``.  Works for any piece
+    width <= 32 (no lane-packing divisibility constraint), which is what
+    lifts ``packed_matmul``'s ``SUPPORTED_BITS`` restriction.
+    """
+    prog = program if program is not None \
+        else lower_exec(layout, elem_widths)
+    names = [a.name for a in layout.problem.arrays]
+
+    def _resolve(ref) -> int:
+        if isinstance(ref, str):
+            if ref not in names:
+                raise KeyError(f"no array named {ref!r}")
+            return names.index(ref)
+        return int(ref)
+
+    wi, si = _resolve(weights), _resolve(scales)
+    k, n = shape
+    bits = prog.elem_widths[wi]
+    if bits > KERNEL_MAX_WIDTH:
+        raise ValueError(
+            f"weight piece width {bits} > {KERNEL_MAX_WIDTH}; "
+            "stream-direct extraction is u32-register based"
+        )
+    if prog.elem_widths[si] != 16:
+        raise ValueError(
+            f"scale piece width {prog.elem_widths[si]} != 16 (bf16)"
+        )
+    if k % group_size:
+        raise ValueError(f"K={k} not divisible by group_size={group_size}")
+    if k * n > prog.piece_depths[wi]:
+        raise ValueError(
+            f"shape {shape} needs {k * n} weight pieces, array has "
+            f"{prog.piece_depths[wi]}"
+        )
+    g = k // group_size
+    if g * n > prog.piece_depths[si]:
+        raise ValueError(
+            f"shape {shape} needs {g * n} scale pieces, array has "
+            f"{prog.piece_depths[si]}"
+        )
+    w_tab = prog.stream_bit_offsets(wi)[:k * n].reshape(k, n)
+    s_tab = prog.stream_bit_offsets(si)[:g * n].reshape(g, n)
+    return StreamTables(bits=bits, group_size=group_size,
+                        w_tab=w_tab, s_tab=s_tab)
+
 
 # ----------------------------------------------------------------------
 # lowering

@@ -28,6 +28,7 @@ boundary (never a row boundary) — a two-word funnel shift recovers it.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,28 @@ from jax.experimental import pallas as pl
 
 from repro.core.exec_plan import _TAB_WIDTH_SHIFT, ExecProgram, lower_exec
 from repro.core.layout import Layout
+
+
+class HostFallbackWarning(UserWarning):
+    """Fused decode silently routed some arrays to the numpy host path.
+
+    Raised (as a warning) when piece widths exceed ``KERNEL_MAX_WIDTH``:
+    those arrays never touch the Pallas kernel, so the decode is not the
+    single-launch accelerator pass the caller likely expects.  Carries
+    the offending ``(name, width)`` pairs on :attr:`arrays`.  Stream-
+    direct matmul avoids this entirely by lowering bundles at element
+    granularity (every element width <= 32).
+    """
+
+    def __init__(self, arrays: tuple[tuple[str, int], ...]):
+        self.arrays = arrays
+        detail = ", ".join(f"{n} ({w}b)" for n, w in arrays)
+        super().__init__(
+            f"decode_layout_fused: {len(arrays)} array(s) exceed the "
+            f"32-bit kernel piece width and fell back to the host "
+            f"path: {detail}. Lower at element granularity "
+            "(elem_widths) to keep the decode on-device."
+        )
 
 # Rows of the packed buffer processed per grid step.  8 sublanes x 128
 # lanes is the native f32/u32 VREG tile; 256 rows keeps the input block
@@ -139,6 +162,9 @@ def decode_layout_fused(layout: Layout, buf_u8, *,
         for i, v in kern.items():
             outs[names[i]] = v
     if prog.host_arrays:
+        warnings.warn(HostFallbackWarning(tuple(
+            (names[i], prog.elem_widths[i]) for i in prog.host_arrays)),
+            stacklevel=2)
         flat = prog.buffer_words64(buf)
         for i in prog.host_arrays:
             # stays numpy uint64: jnp would truncate to 32 bits under the

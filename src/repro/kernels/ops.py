@@ -24,8 +24,16 @@ from repro.core.codegen import DecodePlan, _gather_bits, decode_plan
 from repro.core.exec_plan import ExecProgram
 from repro.core.layout import Layout
 
-from .layout_decode import decode_layout_fused, decode_slot
+from .layout_decode import (  # noqa: F401  (HostFallbackWarning re-export)
+    HostFallbackWarning,
+    decode_layout_fused,
+    decode_slot,
+)
 from .packed_matmul import packed_matmul  # noqa: F401  (re-export)
+from .stream_matmul import (  # noqa: F401  (re-exports)
+    stream_matmul,
+    stream_words,
+)
 
 
 def buffer_to_u32(buf_u8: np.ndarray | jax.Array) -> jax.Array:

@@ -29,6 +29,48 @@ def decode_slot_ref(rows_u32: np.ndarray, offsets: tuple[int, ...],
     return np.stack(cols, axis=1).reshape(-1).astype(np.uint32)
 
 
+def _extract_ref(flat_u32: np.ndarray, tab: np.ndarray,
+                 width: int) -> np.ndarray:
+    """Numpy twin of ``stream_matmul._extract`` (u64 funnel shift)."""
+    flat = np.asarray(flat_u32).reshape(-1).astype(np.uint64)
+    wi = (tab >> 5).astype(np.int64)
+    sh = (tab & np.uint32(31)).astype(np.uint64)
+    lo = flat[wi] >> sh
+    hi = flat[np.minimum(wi + 1, flat.size - 1)] \
+        << ((np.uint64(32) - sh) & np.uint64(63))
+    v = np.where(sh > 0, lo | hi, lo)
+    mask = np.uint64((1 << width) - 1)
+    return (v & mask).astype(np.uint32)
+
+
+def stream_matmul_ref(x: jax.Array, stream_words, w_tab, s_tab, *,
+                      bits: int, group_size: int, block_k: int = 512,
+                      out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for ``stream_matmul``: host-side table decode, then a dot
+    accumulated in the kernel's K-block order (padded K rows are zeros in
+    the kernel's tile, and adding 0.0 is exact, so per-element float
+    reductions match term for term — exact equality holds for any bits,
+    including the widths ``packed_matmul`` cannot lane-pack)."""
+    w_tab = np.asarray(w_tab)
+    s_tab = np.asarray(s_tab)
+    k, n = w_tab.shape
+    codes = _extract_ref(stream_words, w_tab, bits)
+    spat = _extract_ref(stream_words, s_tab, 16)
+    wq = codes.astype(np.float32) - float(1 << (bits - 1))
+    scales = (spat.astype(np.uint32) << 16).view(np.float32)
+    wf = (wq.reshape(k // group_size, group_size, n)
+          * scales[:, None, :]).reshape(k, n)
+    bk = min(block_k, k)
+    bk = -(-bk // group_size) * group_size
+    xf = jnp.asarray(x).astype(jnp.float32)
+    wfj = jnp.asarray(wf)
+    acc = jnp.zeros((x.shape[0], n), jnp.float32)
+    for kk in range(0, k, bk):
+        acc = acc + jnp.dot(xf[:, kk:kk + bk], wfj[kk:kk + bk],
+                            preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
 def packed_matmul_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
                       *, bits: int, group_size: int) -> jax.Array:
     """Oracle for ``packed_matmul``: unpack everything, then one big dot."""

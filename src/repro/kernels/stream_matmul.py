@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: matmul straight out of an Iris-packed stream.
+
+The legacy serving path is two passes — ``decode_layout_fused``
+materializes dense codes/scales in HBM, then ``packed_matmul`` re-reads
+them — paying the packed->dense expansion in memory traffic twice, which
+is exactly the redundant transfer the paper's scheduled layout exists to
+eliminate.  This kernel makes the decode part of the matmul *prologue*:
+each grid tile gathers the packed words it needs from the stream buffer,
+funnel-shifts codes and bf16 scale patterns out in registers,
+dequantizes, and feeds the MXU.  HBM -> registers -> MXU, no dense
+intermediate.
+
+The extraction is table-driven: :class:`~repro.core.exec_plan.StreamTables`
+holds one uint32 *global bit offset* per weight code / scale (u32-word
+view of the stream, ``word = tab >> 5``, ``shift = tab & 31``).  Because
+the table addresses bits, not lanes, any piece width <= 32 works — this
+is what lifts ``packed_matmul``'s ``SUPPORTED_BITS=(2, 4, 8)``
+restriction (int3 LM bundles become servable end-to-end).
+
+Blocking mirrors ``packed_matmul`` exactly — grid (M/bm, N/bn, K/bk) with
+K innermost and a VMEM f32 accumulator — so on shapes both kernels accept
+the two paths perform the identical float ops in the identical order and
+agree *bit-for-bit* (locked down by tests/test_stream_matmul.py).  Unlike
+``packed_matmul``, ragged K and N are handled by zero-padding the offset
+tables and masking the dequantized tile, so non-power-of-two layers need
+no caller-side tiling gymnastics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is importable on CPU for scratch-shape declarations
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+#: lane width of the stream buffer's 2-D staging shape (VREG-aligned)
+_STREAM_LANES = 128
+
+
+def _extract(flat: jax.Array, tab: jax.Array, width: int) -> jax.Array:
+    """Funnel-shift ``width``-bit fields out of ``flat`` u32 words.
+
+    ``tab`` holds global bit offsets; an element straddles at most one
+    word boundary (layout invariant: never a row boundary), so two reads
+    suffice.  The ``min(wi + 1, last)`` clamp keeps the second read in
+    bounds for non-straddling elements at the buffer end; its bits land
+    above ``width`` and are masked off.
+    """
+    wi = (tab >> jnp.uint32(5)).astype(jnp.int32)
+    sh = tab & jnp.uint32(31)
+    last = flat.shape[0] - 1
+    lo = jnp.take(flat, wi)
+    hi = jnp.take(flat, jnp.minimum(wi + 1, last))
+    v = lo >> sh
+    # (32 - sh) & 31 is exact when sh > 0; sh == 0 contributes nothing
+    hi_part = hi << ((jnp.uint32(32) - sh) & jnp.uint32(31))
+    v = v | jnp.where(sh > 0, hi_part, jnp.uint32(0))
+    mask = jnp.uint32((1 << width) - 1 if width < 32 else 0xFFFFFFFF)
+    return v & mask
+
+
+def _stream_matmul_kernel(x_ref, words_ref, wtab_ref, stab_ref, o_ref,
+                          acc_ref, *, bits: int, group_size: int,
+                          n_k_steps: int, k_true: int | None,
+                          n_true: int | None) -> None:
+    bias = float(1 << (bits - 1))
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    flat = words_ref[...].reshape(-1)
+    wtab = wtab_ref[...]                       # (bk, bn) bit offsets
+    bk, bn = wtab.shape
+    codes = _extract(flat, wtab, bits)
+    wq = codes.astype(jnp.float32) - bias      # symmetric biased codes
+    spat = _extract(flat, stab_ref[...], 16)   # bf16 bit patterns
+    scales = jax.lax.bitcast_convert_type(
+        spat << jnp.uint32(16), jnp.float32)   # == bf16.astype(f32)
+    wf = (wq.reshape(bk // group_size, group_size, bn)
+          * scales[:, None, :]).reshape(bk, bn)
+    # ragged K/N: padded table entries decode garbage (possibly NaN
+    # scale patterns) — zero them so 0 * NaN never reaches the
+    # accumulator.  Static None means no padding and keeps the unpadded
+    # path bit-identical to packed_matmul.
+    if k_true is not None or n_true is not None:
+        valid = None
+        if k_true is not None:
+            krow = pl.program_id(2) * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bk, bn), 0)
+            valid = krow < k_true
+        if n_true is not None:
+            ncol = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
+                jnp.int32, (bk, bn), 1)
+            nv = ncol < n_true
+            valid = nv if valid is None else valid & nv
+        wf = jnp.where(valid, wf, 0.0)
+    x = x_ref[...].astype(jnp.float32)         # (bm, bk)
+    acc_ref[...] += jnp.dot(x, wf, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bits", "group_size", "block_m", "block_n", "block_k", "interpret",
+        "out_dtype",
+    ),
+)
+def stream_matmul(x: jax.Array, stream_words: jax.Array, w_tab: jax.Array,
+                  s_tab: jax.Array, *, bits: int, group_size: int,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                  out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """``x @ dequant(stream)`` gathering weights straight from the stream.
+
+    x:            (M, K) float activations
+    stream_words: uint32 packed stream, the flattened
+                  :meth:`~repro.core.exec_plan.ExecProgram.buffer_words32`
+                  view (any shape; flattened row-major)
+    w_tab:        (K, N) uint32 global bit offsets of the weight codes
+    s_tab:        (K // group_size, N) offsets of the bf16 scale patterns
+
+    Any ``1 <= bits <= 32`` is supported; M, K and N may all be ragged.
+    """
+    if not 1 <= bits <= 32:
+        raise ValueError(f"bits must be in [1, 32]; got {bits}")
+    m, k = x.shape
+    kt, n = w_tab.shape
+    if kt != k:
+        raise ValueError(f"w_tab K {kt} != activations K {k}")
+    if k % group_size:
+        raise ValueError(f"K={k} not divisible by group_size={group_size}")
+    if s_tab.shape != (k // group_size, n):
+        raise ValueError(
+            f"s_tab shape {s_tab.shape} != {(k // group_size, n)}")
+    if stream_words.dtype != jnp.uint32:
+        raise ValueError(f"stream must be uint32, got {stream_words.dtype}")
+    if w_tab.dtype != jnp.uint32 or s_tab.dtype != jnp.uint32:
+        raise ValueError("offset tables must be uint32")
+
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = _round_up(min(block_k, k), group_size)
+    m_pad = _round_up(m, block_m)
+    n_pad = _round_up(n, block_n)
+    k_pad = _round_up(k, block_k)
+    g = group_size
+    if m_pad != m or k_pad != k:
+        x = jnp.pad(x, ((0, m_pad - m), (0, k_pad - k)))
+    if k_pad != k or n_pad != n:
+        w_tab = jnp.pad(w_tab, ((0, k_pad - k), (0, n_pad - n)))
+        s_tab = jnp.pad(s_tab, ((0, (k_pad - k) // g), (0, n_pad - n)))
+
+    # stage the stream as a VREG-aligned 2-D block; every grid step sees
+    # the whole buffer (gathers are data-dependent on the tables)
+    flat = stream_words.reshape(-1)
+    s_len = _round_up(flat.shape[0], _STREAM_LANES * 8)
+    if s_len != flat.shape[0]:
+        flat = jnp.pad(flat, (0, s_len - flat.shape[0]))
+    words2d = flat.reshape(s_len // _STREAM_LANES, _STREAM_LANES)
+
+    n_k_steps = k_pad // block_k
+    grid = (m_pad // block_m, n_pad // block_n, n_k_steps)
+    kernel = functools.partial(
+        _stream_matmul_kernel,
+        bits=bits,
+        group_size=group_size,
+        n_k_steps=n_k_steps,
+        k_true=k if k_pad != k else None,
+        n_true=n if n_pad != n else None,
+    )
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec(words2d.shape, lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k // g, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x, words2d, w_tab, s_tab)
+    return out[:m, :n] if (m_pad, n_pad) != (m, n) else out
+
+
+def stream_words(program, buf_u8) -> jax.Array:
+    """Packed ``(c_max, m/8)`` buffer -> flat uint32 device stream.
+
+    One host-side conversion at load time; every subsequent
+    :func:`stream_matmul` reads the same device array.
+    """
+    return jnp.asarray(program.buffer_words32(buf_u8).reshape(-1))
+
+
+def _round_up(x: int, to: int) -> int:
+    return -(-x // to) * to

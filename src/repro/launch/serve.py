@@ -9,8 +9,12 @@ door — ``repro.api.pack_tree`` — which quantizes the weights, plans the
 per-layer Iris stream layouts through the shared layout cache (one
 scheduler run for the whole uniform stack; repeated requests with the
 same shapes never re-run the scheduler) and packs the unified per-layer
-HBM stream buffers.  The report prints the weight-stream bytes-per-token
-comparison plus the one-line `Plan`/`PackedTree` summaries.
+HBM stream buffers.  Lane-packable widths (2/4/8) serve through the
+legacy kernel views; every other width (3/5/6/7) serves *stream-direct*
+— the Pallas matmul gathers weights straight from the packed stream
+(``kernels.stream_matmul``), no dense intermediate.  The report prints
+the weight-stream bytes-per-token comparison plus the one-line
+`Plan`/`PackedTree` summaries and a stream-direct demo matmul.
 """
 from __future__ import annotations
 
@@ -31,12 +35,14 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--packed", action="store_true")
-    # validated at argparse time against what QuantSpec + packed_matmul
-    # actually support, instead of erroring deep inside the kernel path
+    # the stream-direct matmul lifts the old lane-packing restriction:
+    # any QuantSpec width serves (2/4/8 via kernel views, the rest
+    # straight off the Iris stream)
     ap.add_argument("--bits", type=int, default=8,
-                    choices=sorted(SUPPORTED_BITS),
-                    help="quantization width for --packed "
-                         f"(supported: {sorted(SUPPORTED_BITS)})")
+                    choices=list(range(2, 9)),
+                    help="quantization width for --packed; "
+                         f"{sorted(SUPPORTED_BITS)} use the lane-packed "
+                         "kernel views, other widths serve stream-direct")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -80,6 +86,18 @@ def main() -> None:
               f"kernel lanes={prog.kernel.lanes}, "
               f"host-path arrays={len(prog.host_arrays)}, "
               f"pallas calls/decode={prog.n_pallas_calls}")
+
+        # stream-direct exec surface: one demo matmul gathered straight
+        # from layer 0's packed stream — the path packed_decode_step
+        # routes through automatically when kernel views are absent
+        mode = "kernel-views" if pt.packed else "stream-direct"
+        key = next(iter(dict(pt.manifest.shapes)))
+        kk, nn = dict(pt.manifest.shapes)[key]
+        x = jax.numpy.ones((1, kk), jax.numpy.float32)
+        y = pt.matmul_direct(x, key, 0, interpret=True)
+        print(f"serving path: {mode} (int{args.bits}); stream-direct "
+              f"demo {key} (1x{kk})@({kk}x{nn}) -> "
+              f"finite={bool(np.isfinite(np.asarray(y)).all())}")
 
     loop = ServeLoop(model, params, batch_size=args.batch_size,
                      max_seq=args.max_seq)

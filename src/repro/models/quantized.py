@@ -85,17 +85,56 @@ def _pmm(x2d, pw, sc, spec, interpret):
     return out[:b]
 
 
+def _pmm_direct(x2d, pp, name, layer, interpret):
+    """Stream-direct twin of :func:`_pmm`: same B padding and block
+    choices, but the weights are gathered straight from the layer's
+    packed Iris stream (``kernels.stream_matmul``) — no lane-packed
+    kernel view, no dense intermediate, any element width <= 32."""
+    b, k = x2d.shape
+    bm = max(8, 1 << (b - 1).bit_length())
+    if bm != b:
+        x2d = jnp.pad(x2d, ((0, bm - b), (0, 0)))
+    n = pp.shapes[name][1]
+    out = pp.matmul_direct(
+        x2d, name, layer, interpret=interpret,
+        block_m=bm, block_n=min(128, n), block_k=min(512, k))
+    return out[:b]
+
+
 def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
-                       tokens: jax.Array, *, interpret: bool = True
-                       ) -> tuple[jax.Array, dict]:
+                       tokens: jax.Array, *, interpret: bool = True,
+                       weights: str = "auto") -> tuple[jax.Array, dict]:
     """One decode token with dequant-on-load weights (dense archs).
 
     ``pp`` is the :class:`~repro.tree.PackedTree` built by
     ``repro.api.pack_tree``.  Mirrors Model.decode_step but every large
     matmul reads packed codes.
+
+    ``weights`` selects the matmul operand source: ``"packed"`` reads
+    the lane-packed kernel views (two-pass legacy path, bits in
+    ``SUPPORTED_BITS`` only), ``"stream"`` gathers straight from the
+    per-layer Iris stream buffers (stream-direct, any bits <= 32),
+    ``"auto"`` uses the kernel views when the tree has them and falls
+    back to stream-direct otherwise — which is how int3/int5/int6/int7
+    trees serve end-to-end.
     """
     from . import attention as attn
 
+    if weights not in ("auto", "packed", "stream"):
+        raise ValueError(
+            f"weights must be 'auto', 'packed' or 'stream'; got {weights!r}"
+        )
+    use_stream = weights == "stream" or (weights == "auto" and not pp.packed)
+    if weights == "packed" and not pp.packed:
+        raise ValueError(
+            "tree has no lane-packed kernel views (built with "
+            "with_kernel_views=False); serve with weights='stream'"
+        )
+    if use_stream and pp.streams is None:
+        raise ValueError(
+            "tree has no stream buffers (built with with_streams=False); "
+            "serve with weights='packed'"
+        )
     spec = pp.spec
     inv_freq = rope_freqs(cfg)
     pos = state["pos"]
@@ -105,6 +144,9 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
         * jnp.asarray(cfg.d_model ** 0.5, pp.other["embed"].dtype)
 
     def mm(name, period, x2d):
+        if use_stream:
+            return _pmm_direct(x2d.astype(jnp.float32), pp, name, period,
+                               interpret)
         return _pmm(x2d.astype(jnp.float32), pp.packed[name][period],
                     pp.scales[name][period], spec, interpret)
 
@@ -165,7 +207,14 @@ def bytes_per_token_report(cfg: ModelConfig, pp: "PackedTree") -> dict:
     """Weight bytes streamed per decode token: packed vs baselines."""
     n_elems = sum(int(jnp.prod(jnp.array(s)) * n_periods(cfg))
                   for s in pp.shapes.values())
-    packed_b = pp.hbm_bytes()
+    if pp.packed:
+        packed_b = pp.hbm_bytes()
+    else:
+        # stream-direct tree: the per-layer Iris stream *is* the serving
+        # weight storage (scales ride inside it)
+        packed_b = pp.stream_bytes + sum(
+            int(jnp.size(x)) * x.dtype.itemsize
+            for x in jax.tree.leaves(pp.other))
     pad_bits = 8 if pp.spec.bits > 4 else (4 if pp.spec.bits > 2 else 2)
     pad_bits = max(pad_bits, 1 << (pp.spec.bits - 1).bit_length())
     return {

@@ -51,7 +51,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.exec_plan import ExecProgram, lower_exec, pack_compiled
+from repro.core.exec_plan import (
+    ExecProgram,
+    StreamTables,
+    lower_exec,
+    pack_compiled,
+    stream_matmul_tables,
+)
 from repro.core.iris import DEFAULT_CACHE, LayoutCache
 from repro.core.layout import Layout
 from repro.core.packing import (
@@ -234,6 +240,10 @@ class PackedTree:
         self.provenance = provenance
         self._layout: Layout | None = None
         self._program: ExecProgram | None = None
+        # stream-direct matmul caches (static derivations, not leaves):
+        # bit-offset tables per weight key, uint32 word view per layer
+        self._stream_tabs: dict = {}
+        self._stream_words: dict = {}
 
     # -- pytree protocol -----------------------------------------------
     def tree_flatten_with_keys(self):
@@ -297,6 +307,64 @@ class PackedTree:
                                        elem_widths=self.manifest.elem_widths())
         return self._program
 
+    # -- stream-direct matmul (no dense intermediate) -------------------
+    def stream_tables(self, key: str) -> StreamTables:
+        """Bit-offset tables for quantized param ``key`` (e.g. "attn/wq").
+
+        Memoized; all layers share one layout signature, hence one table
+        per weight matrix for the whole stack.
+        """
+        tabs = self._stream_tabs.get(key)
+        if tabs is None:
+            shapes = dict(self.manifest.shapes)
+            if key not in shapes:
+                raise KeyError(
+                    f"{key!r} is not a quantized tensor; have "
+                    f"{sorted(shapes)}"
+                )
+            bname = key.split("/", 1)[1]
+            tabs = stream_matmul_tables(
+                self.layout(), bname, shapes[key],
+                scales=f"{bname}_scales",
+                group_size=self.manifest.spec.group_size,
+                program=self.exec_program())
+            self._stream_tabs[key] = tabs
+        return tabs
+
+    def layer_stream_words(self, layer: int):
+        """Layer ``layer``'s stream as the flat uint32 kernel view."""
+        import jax.numpy as jnp
+
+        words = self._stream_words.get(layer)
+        if words is None:
+            if self.streams is None:
+                raise ValueError(
+                    "tree was built with with_streams=False; stream-"
+                    "direct execution needs the stream buffers"
+                )
+            prog = self.exec_program()
+            words = jnp.asarray(
+                prog.buffer_words32(
+                    np.asarray(self.streams[layer])).reshape(-1))
+            self._stream_words[layer] = words
+        return words
+
+    def matmul_direct(self, x, key: str, layer: int, *,
+                      interpret: bool = True, **block_kw):
+        """``x @ dequant(key)`` gathered straight from layer ``layer``'s
+        packed stream — the serving path that never materializes a dense
+        weight intermediate, for any element width <= 32 (including the
+        widths the lane-packed kernel views cannot represent)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.stream_matmul import stream_matmul
+
+        tabs = self.stream_tables(key)
+        return stream_matmul(
+            x, self.layer_stream_words(layer), jnp.asarray(tabs.w_tab),
+            jnp.asarray(tabs.s_tab), bits=tabs.bits,
+            group_size=tabs.group_size, interpret=interpret, **block_kw)
+
     # -- reporting ------------------------------------------------------
     def summary(self) -> str:
         """One-line report: strategy, B_eff, buffer bytes, provenance."""
@@ -346,7 +414,8 @@ def _layer_element_data(bundle, codes, scales16, norms16, layer: int,
 def pack_tree(cfg, params: dict, spec: QuantSpec, *, m: int = 4096,
               strategy: str = "iris",
               cache: LayoutCache | None = DEFAULT_CACHE,
-              with_streams: bool = True) -> PackedTree:
+              with_streams: bool = True,
+              with_kernel_views: bool | None = None) -> PackedTree:
     """Quantize + plan + pack a parameter tree in one call.
 
     The front door the ISSUE's consumers share: serving
@@ -357,15 +426,33 @@ def pack_tree(cfg, params: dict, spec: QuantSpec, *, m: int = 4096,
     scheduler run (or zero on a warm cache) and N-1 rebinds.
 
     ``with_streams=False`` skips building the unified stream buffers
-    (serving-only use; such a tree cannot be checkpointed packed).
+    (serving-only use; such a tree cannot be checkpointed packed, and
+    cannot serve stream-direct).
+
+    ``with_kernel_views`` controls the lane-packed uint32 views
+    (``.packed``) consumed by the legacy two-pass ``packed_matmul``
+    path.  ``None`` (default) builds them exactly when the bit width
+    lane-packs (``32 % bits == 0``); other widths — int3, int5, ... —
+    serve through :meth:`PackedTree.matmul_direct`, which reads the
+    stream buffers directly, so the whole 2..8-bit range is end-to-end
+    servable.  Forcing ``True`` for a non-lane width raises.
     """
     from repro import api  # deferred: repro.api lazy-loads this module
     from repro.models.quantized import quantizable  # deferred: no cycle
 
-    if spec.bits not in SUPPORTED_BITS:
+    lane_packable = spec.bits in SUPPORTED_BITS
+    if with_kernel_views is None:
+        with_kernel_views = lane_packable
+    if with_kernel_views and not lane_packable:
         raise ValueError(
-            f"pack_tree serves through the lane-packed kernel path, which "
-            f"supports bits in {sorted(SUPPORTED_BITS)}; got {spec.bits}"
+            f"lane-packed kernel views need bits in "
+            f"{sorted(SUPPORTED_BITS)}; got {spec.bits} — serve it "
+            "stream-direct (with_kernel_views=False)"
+        )
+    if not with_kernel_views and not with_streams:
+        raise ValueError(
+            "with_kernel_views=False and with_streams=False leaves "
+            "nothing servable"
         )
     if not quantizable(cfg):
         raise NotImplementedError(
@@ -393,8 +480,9 @@ def pack_tree(cfg, params: dict, spec: QuantSpec, *, m: int = 4096,
                 continue
             k = f"{sub}/{name}"
             qt = jax.vmap(lambda wl: quantize(wl, spec))(w)
-            packed[k] = jax.vmap(
-                lambda c: pack_codes_u32(c, spec.bits))(qt.codes)
+            if with_kernel_views:
+                packed[k] = jax.vmap(
+                    lambda c: pack_codes_u32(c, spec.bits))(qt.codes)
             scales[k] = qt.scales
             shapes[k] = tuple(int(d) for d in w.shape[1:])
             if with_streams:
@@ -480,20 +568,25 @@ def unpack_streams(manifest: LayoutManifest, streams: Any, other: dict, *,
     per_layer = [prog.unpack_indexed(streams[layer])
                  for layer in range(n_layers)]
 
+    # lane-packed kernel views only exist for widths pack_codes_u32 can
+    # represent; other widths serve stream-direct off the buffers
+    lane_packable = spec.bits in SUPPORTED_BITS
     packed: dict[str, Any] = {}
     scales: dict[str, Any] = {}
     for key, (kk, nn) in shapes.items():
         bname = key.split("/", 1)[1]
         ci, si = idx[bname], idx[f"{bname}_scales"]
-        layer_codes = np.stack([
-            per_layer[la][ci][:kk * nn].reshape(kk, nn).astype(np.uint8)
-            for la in range(n_layers)])
         layer_scales = np.stack([
             per_layer[la][si][:(kk // g) * nn]
             .astype(np.uint16).reshape(kk // g, nn)
             for la in range(n_layers)])
-        packed[key] = jax.vmap(
-            lambda c: pack_codes_u32(c, spec.bits))(jnp.asarray(layer_codes))
+        if lane_packable:
+            layer_codes = np.stack([
+                per_layer[la][ci][:kk * nn].reshape(kk, nn).astype(np.uint8)
+                for la in range(n_layers)])
+            packed[key] = jax.vmap(
+                lambda c: pack_codes_u32(c, spec.bits))(
+                    jnp.asarray(layer_codes))
         scales[key] = jax.lax.bitcast_convert_type(
             jnp.asarray(layer_scales), jnp.dtype(spec.scale_dtype))
     pt = PackedTree(packed=packed, scales=scales, other=other,

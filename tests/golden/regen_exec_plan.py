@@ -1,0 +1,32 @@
+"""Regenerate tests/golden/exec_plan_small.json.
+
+Run from the repo root after an *intentional* scheduler/lowering change:
+
+    PYTHONPATH=src python tests/golden/regen_exec_plan.py
+
+Commit the resulting JSON diff together with the change that caused it
+(test_exec_plan_golden.py enforces this).
+"""
+import json
+import pathlib
+import sys
+
+TESTS_DIR = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(TESTS_DIR))
+
+from conftest import GOLDEN_PROBLEM, serialize_exec_program  # noqa: E402
+
+
+def main() -> None:
+    from repro.core.exec_plan import lower_exec
+    from repro.core.iris import schedule
+
+    prog = lower_exec(schedule(GOLDEN_PROBLEM))
+    out = TESTS_DIR / "golden" / "exec_plan_small.json"
+    out.write_text(json.dumps(serialize_exec_program(prog),
+                              indent=1, sort_keys=True) + "\n")
+    print(f"wrote {out} ({out.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,15 +14,8 @@ from repro.core.task import PAPER_EXAMPLE, make_problem
 
 # §4 worked example, non-power-of-two widths/bus, lane-capped, and a
 # multi-interval many-release problem — the ISSUE-4 property-test axes
-PROBLEMS = [
-    PAPER_EXAMPLE,
-    make_problem(40, [("a", 3, 41, 4), ("b", 5, 33, 9), ("c", 7, 17, 9)]),
-    make_problem(72, [("a", 9, 100, 10), ("b", 12, 50, 3),
-                      ("c", 33, 20, 20), ("d", 64, 8, 20)]),
-    make_problem(256, [("u", 64, 131, 33), ("S", 64, 21, 3),
-                       ("D", 64, 131, 36)], max_lanes=2),
-    make_problem(128, [("q", 4, 257, 2), ("s", 16, 31, 2), ("b", 32, 9, 5)]),
-]
+# (shared with the golden-file and stream-matmul suites via conftest)
+from conftest import EXEC_PROBLEMS as PROBLEMS
 LAYOUT_FNS = [schedule, homogeneous_layout, naive_layout]
 
 

@@ -1,0 +1,50 @@
+"""Golden-file regression test for the ExecProgram lowering.
+
+Pins the complete lowered artifact — destination word/shift tables,
+piece bookkeeping, the fused-decode kernel slot table, gathers and the
+stream-direct global bit offsets — for one small canonical mixed-width
+problem, so *any* change to the scheduler or the lowering that moves
+even a single element shows up as a reviewable JSON diff instead of a
+silent layout change.
+
+Regenerate (after an intentional lowering change) with:
+
+    PYTHONPATH=src python tests/golden/regen_exec_plan.py
+
+and commit the diff alongside the change that caused it.
+"""
+import json
+import pathlib
+
+from conftest import GOLDEN_PROBLEM, serialize_exec_program
+from repro.core.exec_plan import lower_exec
+from repro.core.iris import schedule
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "exec_plan_small.json"
+
+
+def test_lowering_matches_golden_file():
+    prog = lower_exec(schedule(GOLDEN_PROBLEM))
+    got = serialize_exec_program(prog)
+    want = json.loads(GOLDEN_PATH.read_text())
+    assert got == want, (
+        "ExecProgram lowering drifted from tests/golden/"
+        "exec_plan_small.json — if the layout change is intentional, "
+        "regenerate with `PYTHONPATH=src python "
+        "tests/golden/regen_exec_plan.py` and commit the diff"
+    )
+
+
+def test_serialization_is_lossless_for_stream_offsets():
+    """The dumped stream offsets must round-trip to exactly what
+    stream_matmul consumes (uint32, element order)."""
+    import numpy as np
+
+    prog = lower_exec(schedule(GOLDEN_PROBLEM))
+    dumped = serialize_exec_program(prog)["stream_bit_offsets"]
+    narrow = [i for i in range(len(prog.piece_depths))
+              if prog.elem_widths[i] <= 32]
+    assert len(dumped) == len(narrow)
+    for js, i in zip(dumped, narrow):
+        np.testing.assert_array_equal(
+            np.asarray(js, dtype=np.uint32), prog.stream_bit_offsets(i))

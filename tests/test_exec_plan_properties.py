@@ -13,25 +13,11 @@ pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
+from conftest import problems
 from repro.core.baselines import homogeneous_layout
 from repro.core.codegen import pack_arrays, random_codes, unpack_arrays
 from repro.core.exec_plan import pack_compiled, unpack_compiled
 from repro.core.iris import schedule
-from repro.core.task import make_problem
-
-
-@st.composite
-def problems(draw):
-    m = draw(st.sampled_from([24, 40, 64, 128, 256]))
-    n = draw(st.integers(2, 5))
-    max_lanes = draw(st.sampled_from([None, 1, 2, 4]))
-    specs = []
-    for i in range(n):
-        width = draw(st.integers(1, min(64, m)))
-        depth = draw(st.integers(1, 400))
-        due = draw(st.integers(0, 40))       # spread -> multi-interval
-        specs.append((f"a{i}", width, depth, due))
-    return make_problem(m, specs, max_lanes=max_lanes)
 
 
 @given(problems(), st.sampled_from(["iris", "homogeneous"]), st.integers(0, 9))

@@ -10,7 +10,6 @@ import pytest
 from repro.core.baselines import homogeneous_layout, naive_layout
 from repro.core.codegen import pack_arrays, random_codes
 from repro.core.iris import schedule
-from repro.core.task import make_problem
 from repro.kernels.layout_decode import decode_slot
 from repro.kernels.ops import buffer_to_u32, decode_layout
 from repro.kernels.packed_matmul import packed_matmul
@@ -52,13 +51,8 @@ class TestDecodeSlot:
 
 
 class TestDecodeLayout:
-    PROBLEMS = [
-        make_problem(32, [("a", 3, 40, 4), ("b", 5, 33, 9), ("c", 8, 17, 9)]),
-        make_problem(64, [("a", 7, 100, 10), ("b", 12, 50, 3),
-                          ("c", 17, 20, 20), ("d", 32, 8, 20)]),
-        make_problem(128, [("q", 4, 257, 2), ("s", 16, 31, 2),
-                           ("b", 32, 9, 5)]),
-    ]
+    # shared with the golden-file suite via conftest
+    from conftest import DECODE_PROBLEMS as PROBLEMS
 
     @pytest.mark.parametrize("prob_idx", range(len(PROBLEMS)))
     @pytest.mark.parametrize("layout_fn", [schedule, homogeneous_layout,

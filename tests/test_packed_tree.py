@@ -113,10 +113,18 @@ def test_decode_step_consumes_packed_tree(setup):
     assert (np.asarray(new_state["pos"]) == 1).all()
 
 
-def test_pack_tree_rejects_unsupported_bits(setup):
+def test_pack_tree_non_lane_bits_serve_stream_direct(setup):
+    """Widths without a lane-packed kernel view (3/5/6/7) used to be
+    rejected outright; the stream-direct matmul made them servable —
+    pack_tree now builds a streams-only tree for them."""
     cfg, _, params, _ = setup
-    with pytest.raises(ValueError, match=r"\[2, 4, 8\]"):
-        api.pack_tree(cfg, params, QuantSpec(bits=5, group_size=32))
+    pt = api.pack_tree(cfg, params, QuantSpec(bits=5, group_size=32))
+    assert pt.packed == {}                  # no kernel views ...
+    assert pt.streams is not None           # ... streams carry the weights
+    # forcing kernel views for a non-lane-packable width still errors
+    with pytest.raises(ValueError, match=r"\(2, 4, 8\)|\[2, 4, 8\]"):
+        api.pack_tree(cfg, params, QuantSpec(bits=5, group_size=32),
+                      with_kernel_views=True)
 
 
 def test_pack_tree_layer_stack_engine_cache(setup):

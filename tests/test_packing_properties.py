@@ -11,27 +11,13 @@ import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings
 
+from conftest import bundles
 from repro.core.packing import (
-    BundleTensor,
     bundle_problem,
     layer_bundle_spec,
     pack_bundle,
 )
 from repro.quant import QuantSpec
-
-
-@st.composite
-def bundles(draw):
-    n = draw(st.integers(2, 6))
-    out = []
-    for i in range(n):
-        out.append(BundleTensor(
-            name=f"t{i}",
-            width_bits=draw(st.integers(2, 32)),
-            n_elems=draw(st.integers(100, 50_000)),
-            stage=draw(st.integers(0, 5)),
-        ))
-    return out
 
 
 @given(bundles(), st.sampled_from([512, 1024, 4096]))
