@@ -22,6 +22,10 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
                            compute prologue) vs the two-pass path on the
                            int3 LM layer bundle; writes
                            BENCH_stream_mm.json (see bench_stream_mm.py)
+  bench_serve            — serving engine: static vs continuous batching
+                           latency/goodput sweep + bit-identity vs the
+                           single-stream loop on the int3 smollm tree;
+                           writes BENCH_serve.json (see bench_serve.py)
 
 CLI:  python benchmarks/run.py [--quick] [--only SUBSTR]
 """
@@ -471,6 +475,17 @@ def bench_stream_matmul() -> None:
     _stream_mm_run(quick=QUICK)
 
 
+def bench_serve() -> None:
+    """Serving engine: static vs continuous batching + bit-identity gate
+    (full bench in bench_serve.py; writes BENCH_serve.json)."""
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from bench_serve import run as _serve_run
+
+    _serve_run(quick=QUICK)
+
+
 ALL = [
     bench_example_layout,
     bench_inv_helmholtz,
@@ -485,6 +500,7 @@ ALL = [
     bench_scheduler_throughput,
     bench_exec,
     bench_stream_matmul,
+    bench_serve,
 ]
 
 

@@ -1,0 +1,61 @@
+"""repro.engine — continuous-batching packed serving engine.
+
+The serving subsystem: a bounded admission queue with priorities and
+deadlines (:mod:`~repro.engine.queue`), a stage-decoupled
+continuous-batching scheduler over model adapters
+(:mod:`~repro.engine.scheduler`), async double-buffered host->device
+stream uploads (:mod:`~repro.engine.streams`), and per-request latency /
+throughput metrics (:mod:`~repro.engine.metrics`).
+
+Quickstart::
+
+    from repro.engine import (DenseAdapter, Engine, EngineConfig,
+                              EngineRequest)
+
+    eng = Engine(DenseAdapter(model, params),
+                 EngineConfig(batch_size=4, max_seq=128))
+    eng.submit(EngineRequest(uid=0, prompt=[1, 2, 3], max_new_tokens=16))
+    eng.run_until_drained()
+    print(eng.metrics.to_json())
+
+``runtime.serve_loop.ServeLoop`` is a deprecated thin wrapper over this
+package.
+"""
+from .metrics import EngineMetrics, RequestTiming, percentile
+from .queue import (
+    REJECT_BACKLOG_FULL,
+    REJECT_DEADLINE_EXPIRED,
+    Admission,
+    AdmissionQueue,
+    EngineRequest,
+)
+from .scheduler import (
+    STAGES,
+    DenseAdapter,
+    Engine,
+    EngineConfig,
+    PackedAdapter,
+    ServeStats,
+    greedy_sampler,
+)
+from .streams import BufferRing, StreamUploader
+
+__all__ = [
+    "Admission",
+    "AdmissionQueue",
+    "BufferRing",
+    "DenseAdapter",
+    "Engine",
+    "EngineConfig",
+    "EngineMetrics",
+    "EngineRequest",
+    "PackedAdapter",
+    "REJECT_BACKLOG_FULL",
+    "REJECT_DEADLINE_EXPIRED",
+    "RequestTiming",
+    "STAGES",
+    "ServeStats",
+    "StreamUploader",
+    "greedy_sampler",
+    "percentile",
+]

@@ -3,6 +3,13 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --reduced --requests 6 --batch-size 2 --max-new 8 [--packed --bits 8]
 
+Serving runs on :mod:`repro.engine` — the stage-decoupled continuous-
+batching engine with bounded admission and per-request metrics.
+``--qps`` switches from closed-loop (submit everything, drain) to
+open-loop load: requests arrive at the given rate on the wall clock and
+queue-time shows up in the metrics.  ``--metrics-out`` writes the
+engine's JSON metrics snapshot (schema: DESIGN.md §Serving-engine).
+
 `--packed` serves through the quantized dequant-on-load path for
 dense-family archs.  All pack/plan wiring goes through the one front
 door — ``repro.api.pack_tree`` — which quantizes the weights, plans the
@@ -12,18 +19,39 @@ same shapes never re-run the scheduler) and packs the unified per-layer
 HBM stream buffers.  Lane-packable widths (2/4/8) serve through the
 legacy kernel views; every other width (3/5/6/7) serves *stream-direct*
 — the Pallas matmul gathers weights straight from the packed stream
-(``kernels.stream_matmul``), no dense intermediate.  The report prints
-the weight-stream bytes-per-token comparison plus the one-line
-`Plan`/`PackedTree` summaries and a stream-direct demo matmul.
+(``kernels.stream_matmul``), no dense intermediate — with host->device
+uploads double-buffered by :class:`repro.engine.StreamUploader` so the
+next layer's transfer overlaps the current layer's compute.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.kernels.packed_matmul import SUPPORTED_BITS
+
+
+def _run_open_loop(engine, requests, qps: float,
+                   max_steps: int = 100_000) -> None:
+    """Submit ``requests`` at ``qps`` arrivals/s (uniform spacing) on the
+    wall clock while stepping the engine; drain after the last arrival."""
+    t0 = time.monotonic()
+    arrivals = [(i / qps, req) for i, req in enumerate(requests)]
+    steps = 0
+    while arrivals or engine.has_work():
+        now = time.monotonic() - t0
+        while arrivals and arrivals[0][0] <= now:
+            engine.submit(arrivals.pop(0)[1])
+        if engine.has_work():
+            engine.step()
+            steps += 1
+            if steps >= max_steps:
+                break
+        elif arrivals:
+            time.sleep(min(0.001, arrivals[0][0] - now))
 
 
 def main() -> None:
@@ -43,12 +71,28 @@ def main() -> None:
                     help="quantization width for --packed; "
                          f"{sorted(SUPPORTED_BITS)} use the lane-packed "
                          "kernel views, other widths serve stream-direct")
+    ap.add_argument("--policy", choices=["continuous", "static"],
+                    default="continuous",
+                    help="slot admission policy (static = drain the whole "
+                         "batch before admitting, the baseline)")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop arrival rate (requests/s); 0 = closed "
+                         "loop (submit all up front, drain)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine metrics JSON snapshot here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import get_config
+    from repro.engine import (
+        DenseAdapter,
+        Engine,
+        EngineConfig,
+        EngineRequest,
+        PackedAdapter,
+        StreamUploader,
+    )
     from repro.models.model import Model
-    from repro.runtime.serve_loop import Request, ServeLoop
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -57,6 +101,7 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
 
+    uploader = None
     if args.packed:
         from repro import api
         from repro.models.quantized import bytes_per_token_report, quantizable
@@ -87,29 +132,47 @@ def main() -> None:
               f"host-path arrays={len(prog.host_arrays)}, "
               f"pallas calls/decode={prog.n_pallas_calls}")
 
-        # stream-direct exec surface: one demo matmul gathered straight
-        # from layer 0's packed stream — the path packed_decode_step
-        # routes through automatically when kernel views are absent
         mode = "kernel-views" if pt.packed else "stream-direct"
-        key = next(iter(dict(pt.manifest.shapes)))
-        kk, nn = dict(pt.manifest.shapes)[key]
-        x = jax.numpy.ones((1, kk), jax.numpy.float32)
-        y = pt.matmul_direct(x, key, 0, interpret=True)
-        print(f"serving path: {mode} (int{args.bits}); stream-direct "
-              f"demo {key} (1x{kk})@({kk}x{nn}) -> "
-              f"finite={bool(np.isfinite(np.asarray(y)).all())}")
+        if not pt.packed:
+            # stream-direct serving: double-buffer the per-layer stream
+            # uploads so transfer overlaps decode
+            uploader = StreamUploader(pt)
+        print(f"serving path: {mode} (int{args.bits})")
+        adapter = PackedAdapter(cfg, pt, interpret=True, uploader=uploader)
+    else:
+        adapter = DenseAdapter(model, params)
 
-    loop = ServeLoop(model, params, batch_size=args.batch_size,
-                     max_seq=args.max_seq)
+    engine = Engine(adapter, EngineConfig(
+        batch_size=args.batch_size, max_seq=args.max_seq,
+        max_backlog=None, policy=args.policy))
+    requests = []
     for uid in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size,
                               rng.integers(2, 6)).tolist()
-        loop.submit(Request(uid=uid, prompt=prompt,
-                            max_new_tokens=args.max_new))
-    stats = loop.run_until_drained(max_steps=5000)
+        requests.append(EngineRequest(uid=uid, prompt=prompt,
+                                      max_new_tokens=args.max_new))
+    if args.qps > 0:
+        _run_open_loop(engine, requests, args.qps)
+    else:
+        for req in requests:
+            engine.submit(req)
+        engine.run_until_drained(max_steps=5000)
+    stats = engine.stats
+    if uploader is not None:
+        print(f"stream uploads: {uploader.stats()}")
+        uploader.close()
     print(f"completed={stats.completed}/{args.requests} "
           f"steps={stats.steps} tokens={stats.tokens_generated} "
           f"admitted={stats.admitted}")
+    snap = engine.metrics.snapshot()
+    lat = snap["latency"]["total"]
+    thr = snap["throughput"]
+    print(f"latency p50={lat['p50_s']*1e3:.1f}ms p99={lat['p99_s']*1e3:.1f}ms"
+          f" tokens/s={thr['tokens_per_s']:.1f}"
+          f" occupancy={thr['mean_batch_occupancy']:.2f}")
+    if args.metrics_out:
+        engine.metrics.to_json(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

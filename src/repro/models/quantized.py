@@ -85,25 +85,28 @@ def _pmm(x2d, pw, sc, spec, interpret):
     return out[:b]
 
 
-def _pmm_direct(x2d, pp, name, layer, interpret):
+def _pmm_direct(x2d, pp, name, layer, interpret, words=None):
     """Stream-direct twin of :func:`_pmm`: same B padding and block
     choices, but the weights are gathered straight from the layer's
     packed Iris stream (``kernels.stream_matmul``) — no lane-packed
-    kernel view, no dense intermediate, any element width <= 32."""
+    kernel view, no dense intermediate, any element width <= 32.
+    ``words`` optionally supplies the layer's stream word view from an
+    external stage (see :meth:`~repro.tree.PackedTree.matmul_direct`)."""
     b, k = x2d.shape
     bm = max(8, 1 << (b - 1).bit_length())
     if bm != b:
         x2d = jnp.pad(x2d, ((0, bm - b), (0, 0)))
     n = pp.shapes[name][1]
     out = pp.matmul_direct(
-        x2d, name, layer, interpret=interpret,
+        x2d, name, layer, interpret=interpret, words=words,
         block_m=bm, block_n=min(128, n), block_k=min(512, k))
     return out[:b]
 
 
 def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
                        tokens: jax.Array, *, interpret: bool = True,
-                       weights: str = "auto") -> tuple[jax.Array, dict]:
+                       weights: str = "auto", slot_ids=None,
+                       stream_source=None) -> tuple[jax.Array, dict]:
     """One decode token with dequant-on-load weights (dense archs).
 
     ``pp`` is the :class:`~repro.tree.PackedTree` built by
@@ -117,6 +120,22 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
     ``"auto"`` uses the kernel views when the tree has them and falls
     back to stream-direct otherwise — which is how int3/int5/int6/int7
     trees serve end-to-end.
+
+    ``slot_ids`` enables ragged-M stepping for the continuous-batching
+    engine: an int array of the *active* cache rows, aligned with
+    ``tokens`` (shape ``(M,)`` for M active slots, M <= cache batch).
+    Only those rows' KV entries and clocks advance; matmul M equals the
+    active count (padded to the kernel tile internally), so half-empty
+    batches cost half-size matmuls.  ``None`` keeps the legacy
+    full-batch semantics (``tokens`` spans every cache row and every
+    row's clock ticks).  Because every per-row computation is
+    independent, a row's results are bit-identical either way.
+
+    ``stream_source`` (stream path only) maps a layer index to that
+    layer's uint32 stream word view — e.g. a
+    :class:`~repro.engine.streams.StreamUploader` staging host->device
+    uploads ahead of compute.  ``None`` reads the tree's resident
+    buffers.
     """
     from . import attention as attn
 
@@ -130,23 +149,33 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
             "tree has no lane-packed kernel views (built with "
             "with_kernel_views=False); serve with weights='stream'"
         )
-    if use_stream and pp.streams is None:
+    if use_stream and pp.streams is None and stream_source is None:
         raise ValueError(
             "tree has no stream buffers (built with with_streams=False); "
-            "serve with weights='packed'"
+            "serve with weights='packed' or supply stream_source"
+        )
+    if stream_source is not None and not use_stream:
+        raise ValueError(
+            "stream_source only applies to the stream-direct path "
+            "(weights='stream', or 'auto' on a kernel-view-free tree)"
         )
     spec = pp.spec
     inv_freq = rope_freqs(cfg)
-    pos = state["pos"]
     b = tokens.shape[0]
+    if slot_ids is not None and slot_ids.shape[0] != b:
+        raise ValueError(
+            f"slot_ids has {slot_ids.shape[0]} rows but tokens has {b}"
+        )
+    rows = jnp.arange(b) if slot_ids is None else slot_ids
+    pos = state["pos"] if slot_ids is None else state["pos"][rows]
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     x = jnp.take(pp.other["embed"], tokens, axis=0) \
         * jnp.asarray(cfg.d_model ** 0.5, pp.other["embed"].dtype)
 
-    def mm(name, period, x2d):
+    def mm(name, period, x2d, words=None):
         if use_stream:
             return _pmm_direct(x2d.astype(jnp.float32), pp, name, period,
-                               interpret)
+                               interpret, words=words)
         return _pmm(x2d.astype(jnp.float32), pp.packed[name][period],
                     pp.scales[name][period], spec, interpret)
 
@@ -154,11 +183,12 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
     k_cache, v_cache = state["k_cache"], state["v_cache"]
     new_k, new_v = [], []
     for layer in range(np_):
+        words = stream_source(layer) if stream_source is not None else None
         hnorm = apply_norm(cfg, jax.tree.map(lambda a: a[layer],
                                              pp.other["norm1"]), x)
-        q = mm("attn/wq", layer, hnorm).reshape(b, 1, h, hd)
-        kk = mm("attn/wk", layer, hnorm).reshape(b, 1, hkv, hd)
-        vv = mm("attn/wv", layer, hnorm).reshape(b, 1, hkv, hd)
+        q = mm("attn/wq", layer, hnorm, words).reshape(b, 1, h, hd)
+        kk = mm("attn/wk", layer, hnorm, words).reshape(b, 1, hkv, hd)
+        vv = mm("attn/wv", layer, hnorm, words).reshape(b, 1, hkv, hd)
         if cfg.use_bias:
             q = q + pp.other["attn/bq"][layer].reshape(1, 1, h, hd)
             kk = kk + pp.other["attn/bk"][layer].reshape(1, 1, hkv, hd)
@@ -166,27 +196,27 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
         pos_b = pos[:, None]
         q = attn.apply_rope(q, pos_b, inv_freq, cfg.mrope_sections)
         kk = attn.apply_rope(kk, pos_b, inv_freq, cfg.mrope_sections)
-        rows = jnp.arange(b)
         kc = k_cache[layer].at[rows, pos].set(
             kk[:, 0].astype(k_cache.dtype))
         vc = v_cache[layer].at[rows, pos].set(
             vv[:, 0].astype(v_cache.dtype))
         new_k.append(kc)
         new_v.append(vc)
-        att = attn.decode_attention(q.astype(jnp.bfloat16), kc, vc, pos)
-        y = mm("attn/wo", layer, att.reshape(b, h * hd))
+        att = attn.decode_attention(q.astype(jnp.bfloat16), kc[rows],
+                                    vc[rows], pos)
+        y = mm("attn/wo", layer, att.reshape(b, h * hd), words)
         if cfg.use_bias:
             y = y + pp.other["attn/bo"][layer]
         x = x + y.astype(x.dtype)
         h2 = apply_norm(cfg, jax.tree.map(lambda a: a[layer],
                                           pp.other["norm2"]), x)
-        g = mm("mlp/w_gate", layer, h2)
-        u = mm("mlp/w_up", layer, h2)
+        g = mm("mlp/w_gate", layer, h2, words)
+        u = mm("mlp/w_up", layer, h2, words)
         if cfg.use_bias:
             g = g + pp.other["mlp/b_gate"][layer]
             u = u + pp.other["mlp/b_up"][layer]
         hh = activation(cfg.act, g) * u
-        y2 = mm("mlp/w_down", layer, hh)
+        y2 = mm("mlp/w_down", layer, hh, words)
         if cfg.use_bias:
             y2 = y2 + pp.other["mlp/b_down"][layer]
         x = x + y2.astype(x.dtype)
@@ -199,7 +229,10 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
     new_state = dict(state)
     new_state["k_cache"] = jnp.stack(new_k)
     new_state["v_cache"] = jnp.stack(new_v)
-    new_state["pos"] = pos + 1
+    if slot_ids is None:
+        new_state["pos"] = pos + 1
+    else:
+        new_state["pos"] = state["pos"].at[rows].add(1)
     return logits, new_state
 
 

@@ -1,125 +1,103 @@
-"""Batched serving loop with continuous batching and Iris-packed weights.
+"""Deprecated: the serving loop moved to :mod:`repro.engine`.
 
-The serving runtime drives ``Model.decode_step`` over a slot-based request
-batch: finished sequences release their slot, queued requests are admitted
-into free slots (continuous batching), and the KV/SSM state is reused
-in place.  With ``packed_weights=True`` the parameters are int-quantized,
-laid out by the Iris scheduler into unified per-layer stream buffers, and
-decoded on the fly — the paper's technique as a first-class serving
-feature (see core/packing.py; bytes-moved accounting is reported by the
-benchmarks).
+``ServeLoop`` was the pre-engine slot-based continuous-batching loop.
+Its whole surface now lives in the engine subsystem — bounded admission
+queue with priorities/deadlines (:mod:`repro.engine.queue`), stage-
+decoupled scheduler with swappable policies
+(:mod:`repro.engine.scheduler`), async stream uploads
+(:mod:`repro.engine.streams`) and per-request metrics
+(:mod:`repro.engine.metrics`).
+
+This module keeps the legacy names importable as thin wrappers:
+
+* ``Request``  -> :class:`repro.engine.EngineRequest` (field-compatible:
+  the first five fields are identical)
+* ``ServeStats`` -> :class:`repro.engine.ServeStats`
+* ``ServeLoop`` -> a shim over :class:`repro.engine.Engine` +
+  :class:`repro.engine.DenseAdapter` with the legacy contract
+  (unbounded queue, ``sample(logits_row, uid)`` callback)
+
+Every access emits a :class:`DeprecationWarning` naming the
+replacement.  New code should construct the engine directly.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+__all__ = ["Request", "ServeLoop", "ServeStats"]
+
+_MOVED = {
+    "Request": "repro.engine.EngineRequest",
+    "ServeStats": "repro.engine.ServeStats",
+    "ServeLoop": "repro.engine.Engine (with repro.engine.DenseAdapter)",
+}
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: list[int]
-    max_new_tokens: int
-    generated: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class _ServeLoop:
+    """Legacy-contract shim over :class:`repro.engine.Engine`.
 
-
-@dataclasses.dataclass
-class ServeStats:
-    steps: int = 0
-    tokens_generated: int = 0
-    completed: int = 0
-    admitted: int = 0
-
-
-class ServeLoop:
-    """Slot-based continuous batching over a fixed decode batch."""
+    Continuous batching over a fixed decode batch, unbounded queue,
+    per-row ``sample(logits_row, uid)`` callback — exactly the old
+    ``ServeLoop`` semantics (token streams are bit-identical), executed
+    by the engine's admit/prefill/decode/retire stages.
+    """
 
     def __init__(self, model, params, batch_size: int, max_seq: int,
                  eos_token: int | None = None,
-                 sample: Callable[[jax.Array, int], int] | None = None):
+                 sample: Callable | None = None):
+        from repro.engine import DenseAdapter, Engine, EngineConfig
+        from repro.engine import greedy_sampler
+
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
         self.eos = eos_token
-        self.sample = sample or (lambda logits, uid: int(jnp.argmax(logits)))
-        self.state = model.init_decode_state(batch_size, max_seq)
-        self.slots: list[Request | None] = [None] * batch_size
-        self.slot_pos = np.zeros(batch_size, dtype=np.int64)
-        self.queue: list[Request] = []
-        self.stats = ServeStats()
-        self._step = jax.jit(model.decode_step)
+        if sample is None:
+            sampler = greedy_sampler
+        else:
+            def sampler(row, req, _sample=sample):
+                return int(_sample(row, req.uid))
+        self.engine = Engine(
+            DenseAdapter(model, params),
+            EngineConfig(batch_size=batch_size, max_seq=max_seq,
+                         max_backlog=None, eos_token=eos_token),
+            sampler=sampler)
 
-    # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    # -- legacy surface, delegated --------------------------------------
+    @property
+    def state(self) -> dict:
+        return self.engine.state
 
-    def _admit(self) -> None:
-        for i in range(self.batch_size):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                self.slot_pos[i] = 0
-                self._reset_slot(i)
-                self.stats.admitted += 1
+    @property
+    def slots(self) -> list:
+        return self.engine.slots
 
-    def _reset_slot(self, i: int) -> None:
-        """Zero slot i's clock and recurrent state (KV needs no clearing:
-        the per-row position mask hides stale entries)."""
-        st = self.state
-        st["pos"] = st["pos"].at[i].set(0)
-        if "ssm" in st:
-            st["ssm"] = st["ssm"].at[:, :, i].set(0.0)
-        if "rwkv" in st:
-            st["rwkv"] = st["rwkv"].at[:, i].set(0.0)
-        for k in ("shift_t", "shift_c"):
-            if k in st:
-                st[k] = st[k].at[:, i].set(0.0)
+    @property
+    def stats(self):
+        return self.engine.stats
 
-    def _next_tokens(self) -> np.ndarray:
-        toks = np.zeros(self.batch_size, dtype=np.int32)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            p = int(self.slot_pos[i])
-            if p < len(req.prompt):
-                toks[i] = req.prompt[p]
-            elif req.generated:
-                toks[i] = req.generated[-1]
-        return toks
+    def submit(self, req) -> None:
+        self.engine.submit(req)
 
     def step(self) -> None:
-        """One decode step across all active slots."""
-        self._admit()
-        toks = jnp.asarray(self._next_tokens())
-        logits, self.state = self._step(self.params, self.state, toks, None)
-        self.stats.steps += 1
-        logits_np = np.asarray(logits, dtype=np.float32)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self.slot_pos[i] += 1
-            p = int(self.slot_pos[i])
-            if p < len(req.prompt):
-                continue                      # still consuming the prompt
-            tok = self.sample(logits_np[i], req.uid)
-            req.generated.append(tok)
-            self.stats.tokens_generated += 1
-            if (len(req.generated) >= req.max_new_tokens
-                    or (self.eos is not None and tok == self.eos)
-                    or p >= self.max_seq - 1):
-                req.done = True
-                self.stats.completed += 1
-                self.slots[i] = None
+        self.engine.step()
 
-    def run_until_drained(self, max_steps: int = 10_000) -> ServeStats:
-        while (any(s is not None for s in self.slots) or self.queue):
-            if self.stats.steps >= max_steps:
-                break
-            self.step()
-        return self.stats
+    def run_until_drained(self, max_steps: int = 10_000):
+        return self.engine.run_until_drained(max_steps)
+
+
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.runtime.serve_loop.{name} is deprecated; use "
+            f"{_MOVED[name]}", DeprecationWarning, stacklevel=2,
+        )
+        if name == "ServeLoop":
+            return _ServeLoop
+        from repro import engine
+
+        return engine.EngineRequest if name == "Request" \
+            else engine.ServeStats
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

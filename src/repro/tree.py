@@ -331,37 +331,54 @@ class PackedTree:
             self._stream_tabs[key] = tabs
         return tabs
 
+    def host_stream_words(self, layer: int) -> np.ndarray:
+        """Layer ``layer``'s stream as host uint32 words (no device copy).
+
+        The upload-side twin of :meth:`layer_stream_words`: the engine's
+        :class:`~repro.engine.streams.StreamUploader` reads these and
+        owns the ``device_put`` itself, so the transfer can overlap
+        decode on a side thread.
+        """
+        if self.streams is None:
+            raise ValueError(
+                "tree was built with with_streams=False; stream-"
+                "direct execution needs the stream buffers"
+            )
+        prog = self.exec_program()
+        return prog.buffer_words32(
+            np.asarray(self.streams[layer])).reshape(-1)
+
     def layer_stream_words(self, layer: int):
         """Layer ``layer``'s stream as the flat uint32 kernel view."""
         import jax.numpy as jnp
 
         words = self._stream_words.get(layer)
         if words is None:
-            if self.streams is None:
-                raise ValueError(
-                    "tree was built with with_streams=False; stream-"
-                    "direct execution needs the stream buffers"
-                )
-            prog = self.exec_program()
-            words = jnp.asarray(
-                prog.buffer_words32(
-                    np.asarray(self.streams[layer])).reshape(-1))
+            words = jnp.asarray(self.host_stream_words(layer))
             self._stream_words[layer] = words
         return words
 
     def matmul_direct(self, x, key: str, layer: int, *,
-                      interpret: bool = True, **block_kw):
+                      interpret: bool = True, words=None, **block_kw):
         """``x @ dequant(key)`` gathered straight from layer ``layer``'s
         packed stream — the serving path that never materializes a dense
         weight intermediate, for any element width <= 32 (including the
-        widths the lane-packed kernel views cannot represent)."""
+        widths the lane-packed kernel views cannot represent).
+
+        ``words`` overrides the stream word source: pass the layer's
+        uint32 word view (e.g. from a
+        :class:`~repro.engine.streams.StreamUploader`) to matmul against
+        an externally staged buffer instead of the tree's resident copy.
+        """
         import jax.numpy as jnp
 
         from repro.kernels.stream_matmul import stream_matmul
 
         tabs = self.stream_tables(key)
+        if words is None:
+            words = self.layer_stream_words(layer)
         return stream_matmul(
-            x, self.layer_stream_words(layer), jnp.asarray(tabs.w_tab),
+            x, words, jnp.asarray(tabs.w_tab),
             jnp.asarray(tabs.s_tab), bits=tabs.bits,
             group_size=tabs.group_size, interpret=interpret, **block_kw)
 
