@@ -70,21 +70,19 @@ def _find_version() -> str:
     Running from a source tree (``PYTHONPATH=src``) has no installed
     distribution, so fall back to parsing the adjacent pyproject.toml.
     """
-    try:
+    import contextlib
+
+    with contextlib.suppress(Exception):
         from importlib.metadata import version
         return version("iris-repro")
-    except Exception:
-        pass
     import pathlib
     import re
     pyproject = pathlib.Path(__file__).resolve().parents[2] / "pyproject.toml"
-    try:
+    with contextlib.suppress(OSError):
         m = re.search(r'^version\s*=\s*"([^"]+)"', pyproject.read_text(),
                       re.MULTILINE)
         if m:
             return m.group(1)
-    except OSError:
-        pass
     return "0.0.0+unknown"
 
 

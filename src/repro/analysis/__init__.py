@@ -1,0 +1,145 @@
+"""repro.analysis — static layout verifier and bandwidth-efficiency lint.
+
+The paper treats a data layout as a provable object: every element's bit
+interval is statically known, so unsoundness (overlap, gaps, OOB words,
+illegal extractions) and inefficiency (wasted bus bits, padding) are
+decidable **without executing anything**.  This package is that checker:
+a pass-based analyzer over :class:`~repro.core.layout.Layout`,
+:class:`~repro.core.exec_plan.ExecProgram`, stream tables and
+:class:`~repro.tree.LayoutManifest`, reporting structured
+:class:`Finding` objects instead of asserting.
+
+Entry points (all return a :class:`Report`; none raises unless asked):
+
+* :func:`verify_layout` — schedule-level + lowered-table proof for one
+  layout (``Plan.verify()`` routes here).
+* :func:`verify_program` — lowered tables only, no re-lowering; what the
+  mutation harness drives (a corrupted table must not be "fixed" by
+  re-deriving it).
+* :func:`verify_manifest` — checkpoint-grade consistency: manifest vs
+  bundle vs intervals vs stream byte-lengths vs content digest
+  (``restore_packed`` runs this before rebinding).
+* :func:`verify_tree` — a whole :class:`~repro.tree.PackedTree`
+  (``PackedTree.verify()`` routes here).
+
+The package imports numpy only; JAX-side objects (manifests, trees) are
+consumed duck-typed so the CLI and CI gate run without a device.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core.exec_plan import ExecProgram, lower_exec
+from repro.core.layout import Layout
+
+from .findings import AnalysisError, Finding, Report, Severity
+from .passes import (
+    DEFAULT_B_EFF_WARN,
+    DEFAULT_PAD_WARN,
+    PASSES,
+    AnalysisContext,
+    run_passes,
+    stream_sha256,
+)
+
+__all__ = [
+    "AnalysisContext", "AnalysisError", "Finding", "Report", "Severity",
+    "PASSES", "run_passes", "stream_sha256",
+    "DEFAULT_B_EFF_WARN", "DEFAULT_PAD_WARN",
+    "verify_layout", "verify_program", "verify_manifest", "verify_tree",
+]
+
+
+def verify_layout(layout: Layout, *,
+                  program: ExecProgram | None = None,
+                  elem_widths: tuple[int, ...] | None = None,
+                  passes: Iterable[str] | None = None,
+                  subject: str = "",
+                  b_eff_warn: float = DEFAULT_B_EFF_WARN) -> Report:
+    """Statically verify one layout and its lowered tables.
+
+    Lowers the layout (memoized on it) unless ``program`` is supplied.
+    A layout that cannot even be lowered is itself a finding
+    (``program/lowering``), not an exception.
+    """
+    report = Report(subject=subject or "layout")
+    if program is None:
+        try:
+            program = lower_exec(layout, elem_widths)
+        except (ValueError, AssertionError) as e:
+            report.findings.append(Finding(
+                "program/lowering", Severity.ERROR,
+                f"layout does not lower to an ExecProgram: {e}"))
+    ctx = AnalysisContext(layout=layout, program=program,
+                          b_eff_warn=b_eff_warn)
+    sub = run_passes(ctx, passes, subject=report.subject)
+    report.findings.extend(sub.findings)
+    report.passes = sub.passes
+    return report
+
+
+def verify_program(program: ExecProgram, *,
+                   layout: Layout | None = None,
+                   passes: Iterable[str] | None = None,
+                   subject: str = "") -> Report:
+    """Verify lowered tables as-is — no re-lowering, no repair.
+
+    The mutation harness drives this: a corrupted table must be judged
+    on its own contents.  ``layout`` (optional) adds array names and the
+    interval/coverage/bandwidth checks.
+    """
+    ctx = AnalysisContext(layout=layout, program=program)
+    return run_passes(ctx, passes, subject=subject or "program")
+
+
+def verify_manifest(manifest: Any, *,
+                    streams: np.ndarray | None = None,
+                    stream_digest: str | None = None,
+                    passes: Iterable[str] | None = None,
+                    subject: str = "") -> Report:
+    """Checkpoint-grade verification of a :class:`LayoutManifest`.
+
+    Rebuilds the layout from the manifest's recorded count-intervals and
+    runs the full pass set over it; a manifest too corrupt to yield a
+    layout (bad bundle, bad signature, illegal intervals) degrades to
+    manifest-pass findings instead of raising.  ``streams`` /
+    ``stream_digest`` extend the proof to the stored bytes.
+    """
+    subject = subject or f"manifest[{getattr(manifest, 'arch', '?')}]"
+    report = Report(subject=subject)
+    layout = program = None
+    try:
+        prob = manifest.problem()
+        if prob.canonical_signature() == manifest.signature:
+            layout = Layout.from_count_intervals(prob, manifest.intervals)
+    except (ValueError, AssertionError, TypeError):
+        # the manifest pass reports the specific inconsistency
+        layout = None
+    if layout is not None:
+        try:
+            program = lower_exec(layout, manifest.elem_widths())
+        except (ValueError, AssertionError) as e:
+            report.findings.append(Finding(
+                "program/lowering", Severity.ERROR,
+                f"manifest layout does not lower: {e}"))
+    ctx = AnalysisContext(
+        layout=layout, program=program, manifest=manifest,
+        streams=None if streams is None else np.asarray(streams),
+        stream_digest=stream_digest)
+    sub = run_passes(ctx, passes, subject=subject)
+    report.findings.extend(sub.findings)
+    report.passes = sub.passes
+    return report
+
+
+def verify_tree(pt: Any, *, passes: Iterable[str] | None = None) -> Report:
+    """Verify a whole :class:`~repro.tree.PackedTree`: its manifest, the
+    layout it rebinds, the lowered tables, and (when present) the
+    resident stream buffers' byte-lengths."""
+    man = pt.manifest
+    streams = None if pt.streams is None else np.asarray(pt.streams)
+    return verify_manifest(
+        man, streams=streams, passes=passes,
+        subject=f"PackedTree[{man.arch}]")

@@ -395,6 +395,22 @@ class Plan:
         self.layout.validate()
         return self
 
+    def verify(self, *, raise_on_error: bool = True, passes=None):
+        """Run the static layout analyzer over this plan's layout and
+        lowered tables (:mod:`repro.analysis`).
+
+        Returns the :class:`~repro.analysis.Report`; with
+        ``raise_on_error=True`` (default) any error-severity finding
+        raises :class:`~repro.analysis.AnalysisError` naming the rule —
+        "verify before you serve".
+        """
+        from .analysis import verify_layout  # lazy: keep api import lean
+
+        report = verify_layout(
+            self.layout, program=self.exec_program, passes=passes,
+            subject=f"Plan[{self.strategy}]")
+        return report.raise_if_errors() if raise_on_error else report
+
     def render(self, max_cycles: int = 64) -> str:
         """ASCII rendering in the style of the paper's Figs. 3-5."""
         return self.layout.render(max_cycles=max_cycles)

@@ -223,6 +223,7 @@ class CheckpointManager:
     # ------------------------------------------------------------------
     _PACKED_KEY = "packed_tree_manifest"
     _SKELETON_KEY = "packed_tree_skeleton"
+    _DIGEST_KEY = "packed_stream_sha256"
 
     def save_packed(self, step: int, pt: Any,
                     extra: dict | None = None) -> str:
@@ -242,6 +243,8 @@ class CheckpointManager:
                 "PackedTree was built with with_streams=False; packed "
                 "checkpointing needs the stream buffers"
             )
+        from repro.analysis import stream_sha256
+
         payload = {
             "streams": np.asarray(pt.streams),
             "other": jax.tree.map(lambda x: np.asarray(x), pt.other),
@@ -250,23 +253,20 @@ class CheckpointManager:
         merged = dict(extra or {})
         merged[self._PACKED_KEY] = pt.manifest.to_json_dict()
         merged[self._SKELETON_KEY] = skeleton
+        # content digest of the stream bytes: layout tables cannot see
+        # bit-flips, so restore verifies the bytes themselves
+        merged[self._DIGEST_KEY] = stream_sha256(payload["streams"])
         return self.save(step, payload, merged)
 
-    def restore_packed(self, step: int | None = None, *,
-                       cache: Any = _DEFAULT_CACHE_SENTINEL,
-                       ) -> tuple[Any, dict]:
-        """Restore a :class:`repro.tree.PackedTree` from a packed save.
+    def _load_packed(self, step: int | None):
+        """Load a packed checkpoint's pieces without rebinding anything.
 
-        Mesh-free like :meth:`restore` (host numpy; re-place with
-        ``jax.device_put(pt, packed_tree_shardings(pt, mesh))``).  The
-        layout comes from the shared cache when warm (O(intervals)
-        rebind) or from the manifest's recorded count-intervals when
-        cold — the scheduler never runs; packed codes and scale bit
-        patterns are reconstructed bit-identically.  Returns
-        ``(PackedTree, extra)`` with the packed bookkeeping keys
-        stripped from ``extra``.
+        Returns ``(tree_manifest, payload, extra, digest)`` where
+        ``payload`` holds the host leaves (``streams`` / ``other``) and
+        ``digest`` is the recorded stream sha256 (``None`` for packed
+        checkpoints from before digests were stored).
         """
-        from repro.tree import LayoutManifest, unpack_streams
+        from repro.tree import LayoutManifest
 
         step = self.latest_step() if step is None else step
         if step is None:
@@ -281,6 +281,7 @@ class CheckpointManager:
         tree_manifest = LayoutManifest.from_json_dict(
             extra.pop(self._PACKED_KEY))
         skeleton = extra.pop(self._SKELETON_KEY)
+        digest = extra.pop(self._DIGEST_KEY, None)
         leaves = []
         for meta in manifest["leaves"]:
             arr = np.load(d / meta["file"])
@@ -289,6 +290,56 @@ class CheckpointManager:
                 arr = arr.view(want_dtype)
             leaves.append(arr)
         payload = _unskeletonize(skeleton, leaves)
+        return tree_manifest, payload, extra, digest
+
+    def verify_packed(self, step: int | None = None):
+        """Statically verify a packed checkpoint **without restoring it**.
+
+        Runs the :mod:`repro.analysis` manifest-consistency pass set over
+        the stored manifest, intervals, stream byte-lengths and content
+        digest; returns the :class:`~repro.analysis.Report` (never
+        raises on findings — this is the inspection surface;
+        :meth:`restore_packed` is the one that refuses).
+        """
+        from repro.analysis import verify_manifest
+
+        tree_manifest, payload, _extra, digest = self._load_packed(step)
+        return verify_manifest(
+            tree_manifest, streams=payload["streams"],
+            stream_digest=digest,
+            subject=f"ckpt[{self.root.name}/{tree_manifest.arch}]")
+
+    def restore_packed(self, step: int | None = None, *,
+                       cache: Any = _DEFAULT_CACHE_SENTINEL,
+                       verify: bool = True) -> tuple[Any, dict]:
+        """Restore a :class:`repro.tree.PackedTree` from a packed save.
+
+        Mesh-free like :meth:`restore` (host numpy; re-place with
+        ``jax.device_put(pt, packed_tree_shardings(pt, mesh))``).  The
+        layout comes from the shared cache when warm (O(intervals)
+        rebind) or from the manifest's recorded count-intervals when
+        cold — the scheduler never runs; packed codes and scale bit
+        patterns are reconstructed bit-identically.
+
+        Before rebinding, the static analyzer proves the checkpoint
+        self-consistent (manifest vs bundle vs intervals vs stream
+        byte-lengths vs content digest); a corrupted checkpoint raises
+        :class:`~repro.analysis.AnalysisError` naming the violated rule
+        instead of surfacing as a shape error or silently-garbage
+        weights (``verify=False`` skips, for forensics on a checkpoint
+        the analyzer already rejected).  Returns ``(PackedTree, extra)``
+        with the packed bookkeeping keys stripped from ``extra``.
+        """
+        from repro.tree import unpack_streams
+
+        tree_manifest, payload, extra, digest = self._load_packed(step)
+        if verify:
+            from repro.analysis import verify_manifest
+
+            verify_manifest(
+                tree_manifest, streams=payload["streams"],
+                stream_digest=digest,
+                subject=f"ckpt[{self.root.name}]").raise_if_errors()
         if cache is _DEFAULT_CACHE_SENTINEL:
             from repro.core.iris import DEFAULT_CACHE
             cache = DEFAULT_CACHE

@@ -68,12 +68,11 @@ def hls_padded_layout(problem: LayoutProblem) -> Layout:
             intervals.append((full, ((i, lanes),)))
         if rem:
             intervals.append((1, ((i, rem),)))
-    layout = Layout.from_count_intervals(problem, intervals)
     # NOTE: bit offsets inside the Layout are computed with the TRUE widths,
     # so the layout object remains a valid dense plan; the padding cost is
     # modelled in the cycle count (lanes per cycle), which is what drives
     # every metric.  See tests/test_iris_paper_example.py.
-    return layout
+    return Layout.from_count_intervals(problem, intervals)
 
 
 ALL_BASELINES = {

@@ -48,6 +48,7 @@ import dataclasses
 import numpy as np
 
 from .layout import Layout
+from .util import round_up as _round_up
 
 #: Piece widths above this go to the host path instead of the Pallas
 #: kernel (u32 funnel shifts decode at most 32-bit pieces).
@@ -458,10 +459,6 @@ def _lower_kernel_table(prob, elem_widths, piece_base, word, shift,
         for i in kernel_arrays)
     return KernelTable(words32=words32, lanes=lanes, tab=tab,
                        gathers=gathers), host_arrays
-
-
-def _round_up(x: int, to: int) -> int:
-    return -(-x // to) * to
 
 
 # ----------------------------------------------------------------------

@@ -31,6 +31,7 @@ from .exec_plan import ExecProgram, lower_exec, pack_compiled
 from .iris import DEFAULT_CACHE, LayoutCache
 from .layout import Layout
 from .task import ArraySpec, LayoutProblem
+from .util import pad_bundle_elements  # noqa: F401  (compat re-export)
 
 #: dataflow order of a standard decoder layer: (tensor role -> stage)
 LAYER_STAGES = (
@@ -146,27 +147,6 @@ def bundle_problem(bundle: list[BundleTensor], m: int = 4096,
     return LayoutProblem(m=m, arrays=tuple(arrays))
 
 
-def pad_bundle_elements(prob: LayoutProblem, prog: ExecProgram,
-                        data: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
-    """Flatten + zero-pad per-tensor element data up to whole scheduling
-    units (``prog.piece_depths``), ready for :func:`pack_compiled`.
-
-    Shared by :func:`pack_bundle` and ``repro.tree.pack_tree`` — the one
-    place bundle element streams meet the compiled pack program.
-    """
-    padded: dict[str, np.ndarray] = {}
-    for i, spec in enumerate(prob.arrays):
-        vals = np.asarray(data[spec.name]).reshape(-1).astype(np.uint64)
-        pad = prog.piece_depths[i] - vals.shape[0]
-        if pad < 0:
-            raise ValueError(
-                f"{spec.name}: {vals.shape[0]} elements exceed the "
-                f"scheduled capacity {prog.piece_depths[i]}"
-            )
-        if pad:
-            vals = np.pad(vals, (0, pad))
-        padded[spec.name] = vals
-    return padded
 
 
 def pack_bundle(bundle: list[BundleTensor], m: int = 4096,

@@ -37,6 +37,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.exec_plan import _TAB_WIDTH_SHIFT, ExecProgram, lower_exec
 from repro.core.layout import Layout
+from repro.core.util import round_up as _round_up
 
 
 class HostFallbackWarning(UserWarning):
@@ -64,6 +65,16 @@ class HostFallbackWarning(UserWarning):
 # lanes is the native f32/u32 VREG tile; 256 rows keeps the input block
 # (256, words) comfortably under VMEM while amortizing control overhead.
 DEFAULT_TILE_ROWS = 256
+
+#: (layout signature, array name) pairs already warned about — serving
+#: loops decode the same layout thousands of times per second, so the
+#: fallback warning fires once per distinct (layout, array), not per call
+_FALLBACK_WARNED: set[tuple] = set()
+
+
+def reset_host_fallback_warnings() -> None:
+    """Forget which (layout, array) host fallbacks have been warned about."""
+    _FALLBACK_WARNED.clear()
 
 
 # ----------------------------------------------------------------------
@@ -162,9 +173,13 @@ def decode_layout_fused(layout: Layout, buf_u8, *,
         for i, v in kern.items():
             outs[names[i]] = v
     if prog.host_arrays:
-        warnings.warn(HostFallbackWarning(tuple(
-            (names[i], prog.elem_widths[i]) for i in prog.host_arrays)),
-            stacklevel=2)
+        sig = layout.problem.canonical_signature()
+        fresh = tuple(
+            (names[i], prog.elem_widths[i]) for i in prog.host_arrays
+            if (sig, names[i]) not in _FALLBACK_WARNED)
+        if fresh:
+            _FALLBACK_WARNED.update((sig, n) for n, _w in fresh)
+            warnings.warn(HostFallbackWarning(fresh), stacklevel=2)
         flat = prog.buffer_words64(buf)
         for i in prog.host_arrays:
             # stays numpy uint64: jnp would truncate to 32 bits under the
@@ -225,7 +240,3 @@ def decode_slot(rows_u32: jax.Array, *, offsets: tuple[int, ...], width: int,
         interpret=interpret,
     )(rows_u32)
     return out[:n_rows].reshape(n_rows * lanes)
-
-
-def _round_up(x: int, to: int) -> int:
-    return -(-x // to) * to

@@ -28,6 +28,7 @@ from .layout_decode import (  # noqa: F401  (HostFallbackWarning re-export)
     HostFallbackWarning,
     decode_layout_fused,
     decode_slot,
+    reset_host_fallback_warnings,
 )
 from .packed_matmul import packed_matmul  # noqa: F401  (re-export)
 from .stream_matmul import (  # noqa: F401  (re-exports)

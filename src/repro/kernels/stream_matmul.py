@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.util import round_up as _round_up
+
 try:  # pltpu is importable on CPU for scratch-shape declarations
     from jax.experimental.pallas import tpu as pltpu
 except ImportError:  # pragma: no cover
@@ -203,6 +205,3 @@ def stream_words(program, buf_u8) -> jax.Array:
     """
     return jnp.asarray(program.buffer_words32(buf_u8).reshape(-1))
 
-
-def _round_up(x: int, to: int) -> int:
-    return -(-x // to) * to

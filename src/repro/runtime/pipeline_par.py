@@ -81,10 +81,9 @@ def pipeline_forward(stage_fn: Callable, mesh: Mesh, cfg: PipelineConfig,
 
         buf, outs = jax.lax.fori_loop(0, cfg.n_ticks, tick, (buf, outs))
         # only the last stage holds real outputs; share them back
-        outs = jax.lax.psum(
+        return jax.lax.psum(
             jnp.where(stage_id == s - 1, outs, jnp.zeros_like(outs)),
             "stage")
-        return outs
 
     fn = jax.jit(
         jax.shard_map(

@@ -382,6 +382,21 @@ class PackedTree:
             jnp.asarray(tabs.s_tab), bits=tabs.bits,
             group_size=tabs.group_size, interpret=interpret, **block_kw)
 
+    # -- verification ---------------------------------------------------
+    def verify(self, *, raise_on_error: bool = True, passes=None):
+        """Statically verify this tree before serving or checkpointing.
+
+        Runs the :mod:`repro.analysis` pass set over the manifest, the
+        layout it rebinds, the lowered tables and the resident stream
+        buffers.  Returns the :class:`~repro.analysis.Report`; with
+        ``raise_on_error=True`` (default) any error-severity finding
+        raises :class:`~repro.analysis.AnalysisError`.
+        """
+        from repro.analysis import verify_tree  # lazy: avoid cycle
+
+        report = verify_tree(self, passes=passes)
+        return report.raise_if_errors() if raise_on_error else report
+
     # -- reporting ------------------------------------------------------
     def summary(self) -> str:
         """One-line report: strategy, B_eff, buffer bytes, provenance."""

@@ -15,36 +15,15 @@ import os
 
 import numpy as np
 
-from repro.core.task import PAPER_EXAMPLE, make_problem
-
-# ----------------------------------------------------------------------
-# deterministic problem sets
-# ----------------------------------------------------------------------
-#: §4 worked example, non-power-of-two widths/bus, lane-capped, and a
-#: multi-interval many-release problem — the equivalence-test axes
-#: shared by test_exec_plan.py and the golden-file suite
-EXEC_PROBLEMS = [
-    PAPER_EXAMPLE,
-    make_problem(40, [("a", 3, 41, 4), ("b", 5, 33, 9), ("c", 7, 17, 9)]),
-    make_problem(72, [("a", 9, 100, 10), ("b", 12, 50, 3),
-                      ("c", 33, 20, 20), ("d", 64, 8, 20)]),
-    make_problem(256, [("u", 64, 131, 33), ("S", 64, 21, 3),
-                       ("D", 64, 131, 36)], max_lanes=2),
-    make_problem(128, [("q", 4, 257, 2), ("s", 16, 31, 2), ("b", 32, 9, 5)]),
-]
-
-#: mixed-width kernel-decode problems shared with test_kernels.py
-DECODE_PROBLEMS = [
-    make_problem(32, [("a", 3, 40, 4), ("b", 5, 33, 9), ("c", 8, 17, 9)]),
-    make_problem(64, [("a", 7, 100, 10), ("b", 12, 50, 3),
-                      ("c", 17, 20, 20), ("d", 32, 8, 20)]),
-    make_problem(128, [("q", 4, 257, 2), ("s", 16, 31, 2),
-                       ("b", 32, 9, 5)]),
-]
-
-#: the golden-file canonical problem (small enough to check in its
-#: lowered tables verbatim)
-GOLDEN_PROBLEM = DECODE_PROBLEMS[0]
+# the deterministic problem sets live in repro.analysis.suite — one
+# source of truth shared by these tests and the analysis-gate CI job
+from repro.analysis.suite import (  # noqa: F401  (test-suite re-exports)
+    DECODE_PROBLEMS,
+    EXEC_PROBLEMS,
+    GATE_PROBLEMS,
+    GOLDEN_PROBLEM,
+)
+from repro.core.task import make_problem
 
 
 # ----------------------------------------------------------------------

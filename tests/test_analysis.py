@@ -1,0 +1,287 @@
+"""repro.analysis: the static layout verifier and its mutation harness.
+
+Three claims are tested:
+
+* **Soundness is falsifiable** — for every registered corruption class
+  (overlapping pieces, coverage gaps, OOB words, wrong shifts, kernel
+  table skew, truncated streams, manifest skew, bit flips) the analyzer
+  reports an error finding with the documented rule id.
+* **No false positives** — every registered strategy x the shared
+  problem suite verifies clean (the same combination the CI
+  analysis-gate enforces).
+* **The wiring holds** — ``Plan.verify()``, ``PackedTree.verify()``,
+  ``restore_packed`` and the ``python -m repro.analysis`` CLI all route
+  through the analyzer and surface structured reports.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from conftest import GATE_PROBLEMS
+from repro import api
+from repro.analysis import (
+    AnalysisError,
+    Finding,
+    Report,
+    Severity,
+    stream_sha256,
+    verify_layout,
+    verify_manifest,
+    verify_program,
+)
+from repro.analysis.mutations import (
+    CHECKPOINT_MUTATIONS,
+    PROGRAM_MUTATIONS,
+    corrupt_checkpoint,
+    corrupt_program,
+)
+from repro.core.exec_plan import lower_exec
+from repro.core.iris import LayoutCache
+
+STRATEGIES = api.strategies()
+
+#: non-power-of-two, all-kernel-width problem the program mutations use
+MUT_PROBLEM = GATE_PROBLEMS[1]
+
+
+# ----------------------------------------------------------------------
+# findings model
+# ----------------------------------------------------------------------
+class TestFindingsModel:
+    def test_severity_ordering_and_str(self):
+        assert Severity.INFO < Severity.WARNING < Severity.ERROR
+        assert str(Severity.ERROR) == "error"
+
+    def test_report_json_and_render(self):
+        r = Report(subject="t")
+        r.findings.append(Finding("p/x", Severity.ERROR, "boom",
+                                  array="a", locus="piece 3",
+                                  fixit_hint="re-lower"))
+        r.findings.append(Finding("p/y", Severity.INFO, "fyi"))
+        d = r.to_json_dict()
+        assert not d["ok"] and d["n_errors"] == 1
+        assert d["findings"][0]["severity"] == "error"
+        assert json.loads(r.to_json()) == d          # serializable
+        txt = r.render()
+        assert "p/x" in txt and "piece 3" in txt and "re-lower" in txt
+        # min_severity filters info out
+        assert "p/y" not in r.render(Severity.WARNING)
+
+    def test_raise_if_errors(self):
+        clean = Report()
+        assert clean.raise_if_errors() is clean      # chainable
+        bad = Report()
+        bad.findings.append(Finding("p/x", Severity.ERROR, "boom"))
+        with pytest.raises(AnalysisError) as ei:
+            bad.raise_if_errors()
+        assert ei.value.report is bad
+        assert "p/x" in str(ei.value)
+
+    def test_unknown_pass_rejected(self):
+        from repro.analysis.passes import AnalysisContext, run_passes
+
+        with pytest.raises(KeyError, match="registered"):
+            run_passes(AnalysisContext(), ["no-such-pass"])
+
+
+# ----------------------------------------------------------------------
+# the clean gate: every strategy x the shared suite has zero errors
+# ----------------------------------------------------------------------
+class TestCleanGate:
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize(
+        "prob", GATE_PROBLEMS,
+        ids=[f"m{p.m}-" + "".join(a.name[0] for a in p.arrays)
+             for p in GATE_PROBLEMS])
+    def test_zero_error_findings(self, strategy, prob):
+        lay = api.plan(prob, strategy, cache=None).layout
+        report = verify_layout(lay, subject=strategy)
+        assert report.ok, report.render()
+
+    def test_plan_verify_chainable_and_raising(self):
+        p = api.plan(MUT_PROBLEM, cache=None)
+        report = p.verify()                          # no error -> returns
+        assert report.ok and "interval" in report.passes
+        assert "program" in report.passes
+
+    def test_wide_arrays_report_host_fallback_warning(self):
+        # GATE_PROBLEMS[2] has 33/64-bit arrays -> host path findings
+        lay = api.plan(GATE_PROBLEMS[2], cache=None).layout
+        report = verify_layout(lay)
+        assert report.ok
+        rules = {f.rule_id for f in report.warnings}
+        assert "extraction/host-fallback" in rules
+
+    def test_bandwidth_metric_reported(self):
+        lay = api.plan(MUT_PROBLEM, cache=None).layout
+        report = verify_layout(lay)
+        eff = [f for f in report if f.rule_id == "bandwidth/efficiency"]
+        assert len(eff) == 1 and "B_eff" in eff[0].message
+
+
+# ----------------------------------------------------------------------
+# mutation harness: corrupted tables must be caught
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lowered():
+    lay = api.plan(MUT_PROBLEM, cache=None).layout
+    return lay, lower_exec(lay)
+
+
+class TestProgramMutations:
+    @pytest.mark.parametrize("kind", sorted(PROGRAM_MUTATIONS))
+    def test_corruption_detected(self, kind, lowered):
+        lay, prog = lowered
+        mut = corrupt_program(prog, kind)
+        report = verify_program(mut, layout=lay)
+        assert not report.ok, f"{kind} went undetected"
+        got = {f.rule_id for f in report.errors}
+        want = set(PROGRAM_MUTATIONS[kind])
+        assert got & want, f"{kind}: expected one of {want}, got {got}"
+
+    def test_mutation_does_not_touch_original(self, lowered):
+        lay, prog = lowered
+        for kind in PROGRAM_MUTATIONS:
+            corrupt_program(prog, kind)
+        assert verify_program(prog, layout=lay).ok
+
+    def test_unknown_kind_rejected(self, lowered):
+        _lay, prog = lowered
+        with pytest.raises(KeyError):
+            corrupt_program(prog, "no-such-mutation")
+
+
+# ----------------------------------------------------------------------
+# checkpoint-grade verification (manifest + streams + digest)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def packed_tree():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.quant import QuantSpec
+
+    cfg = get_config("smollm-135m").reduced(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=128, head_dim=32)
+    params = Model(cfg, remat="none").init(jax.random.PRNGKey(0))
+    return api.pack_tree(cfg, params, QuantSpec(bits=4, group_size=32),
+                         cache=LayoutCache())
+
+
+class TestManifestMutations:
+    @pytest.mark.parametrize("kind", sorted(CHECKPOINT_MUTATIONS))
+    def test_corruption_detected(self, kind, packed_tree):
+        from repro.tree import LayoutManifest
+
+        pt = packed_tree
+        streams = np.asarray(pt.streams)
+        digest = stream_sha256(streams)
+        d, s, g = corrupt_checkpoint(
+            pt.manifest.to_json_dict(), streams, digest, kind)
+        report = verify_manifest(LayoutManifest.from_json_dict(d),
+                                 streams=s, stream_digest=g)
+        assert not report.ok, f"{kind} went undetected"
+        got = {f.rule_id for f in report.errors}
+        want = set(CHECKPOINT_MUTATIONS[kind])
+        assert got & want, f"{kind}: expected one of {want}, got {got}"
+
+    def test_clean_tree_verifies(self, packed_tree):
+        report = packed_tree.verify()                # raises on errors
+        assert report.ok
+        assert {"interval", "program", "kernel", "stream", "extraction",
+                "manifest", "bandwidth"} <= set(report.passes)
+
+    def test_verify_manifest_without_streams(self, packed_tree):
+        assert verify_manifest(packed_tree.manifest).ok
+
+
+class TestRestorePackedCorruption:
+    """save_packed -> tamper the bytes on disk -> restore_packed must
+    raise the analyzer's structured error, naming the violated rule."""
+
+    def _save(self, tmp_path, pt):
+        from repro.checkpoint.checkpoint import CheckpointManager
+
+        mgr = CheckpointManager(tmp_path, keep_n=2)
+        path = mgr.save_packed(0, pt)
+        d = json.loads((tmp_path / "step_00000000" /
+                        "manifest.json").read_text())
+        streams_leaf = d["paths"].index("streams")
+        return mgr, tmp_path / "step_00000000", \
+            f"arr_{streams_leaf:05d}.npy", d
+
+    def _expect_rejection(self, mgr, rule):
+        with pytest.raises(AnalysisError) as ei:
+            mgr.restore_packed(cache=LayoutCache())
+        assert rule in ei.value.report.rule_ids(), \
+            ei.value.report.render()
+
+    def test_clean_roundtrip_verifies_and_restores(self, tmp_path,
+                                                   packed_tree):
+        mgr, _d, _f, _m = self._save(tmp_path, packed_tree)
+        assert mgr.verify_packed().ok
+        pt2, _extra = mgr.restore_packed(cache=LayoutCache())
+        assert np.array_equal(np.asarray(packed_tree.streams),
+                              np.asarray(pt2.streams))
+
+    def test_truncated_stream_bytes_rejected(self, tmp_path, packed_tree):
+        mgr, d, stream_file, _m = self._save(tmp_path, packed_tree)
+        arr = np.load(d / stream_file)
+        np.save(d / stream_file, arr[:, :, :-4])
+        self._expect_rejection(mgr, "manifest/stream-shape")
+
+    def test_bit_flipped_stream_rejected(self, tmp_path, packed_tree):
+        mgr, d, stream_file, _m = self._save(tmp_path, packed_tree)
+        arr = np.load(d / stream_file).copy()
+        arr.flat[7] ^= np.uint8(0x10)
+        np.save(d / stream_file, arr)
+        self._expect_rejection(mgr, "manifest/stream-digest")
+
+    def test_tampered_manifest_signature_rejected(self, tmp_path,
+                                                  packed_tree):
+        mgr, d, _f, meta = self._save(tmp_path, packed_tree)
+        sig = meta["extra"]["packed_tree_manifest"]["signature"]
+        sig[0] += 8
+        (d / "manifest.json").write_text(json.dumps(meta))
+        self._expect_rejection(mgr, "manifest/signature")
+
+    def test_verify_false_skips_the_gate(self, tmp_path, packed_tree):
+        """Forensics escape hatch: verify=False restores the bytes the
+        analyzer would reject (digest mismatch does not break unpack)."""
+        mgr, d, stream_file, _m = self._save(tmp_path, packed_tree)
+        arr = np.load(d / stream_file).copy()
+        arr.flat[7] ^= np.uint8(0x10)
+        np.save(d / stream_file, arr)
+        pt2, _extra = mgr.restore_packed(cache=LayoutCache(),
+                                         verify=False)
+        assert not np.array_equal(np.asarray(packed_tree.streams),
+                                  np.asarray(pt2.streams))
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+class TestCli:
+    def test_gate_writes_artifact_and_exits_zero(self, tmp_path):
+        from repro.analysis.__main__ import main
+
+        out = tmp_path / "gate.json"
+        rc = main(["--json", str(out), "gate", "--strategies",
+                   "homogeneous", "hls_padded"])
+        assert rc == 0
+        payload = json.loads(out.read_text())
+        assert payload["ok"] and payload["n_errors"] == 0
+        assert payload["n_reports"] == 2 * len(GATE_PROBLEMS)
+        subjects = [r["subject"] for r in payload["reports"]]
+        assert any(s.startswith("homogeneous:") for s in subjects)
+
+    def test_config_subcommand(self, capsys):
+        from repro.analysis.__main__ import main
+
+        rc = main(["config", "smollm-135m", "--bits", "4",
+                   "--layers", "1"])
+        assert rc == 0
+        assert "OK" in capsys.readouterr().out

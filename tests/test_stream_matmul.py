@@ -164,7 +164,9 @@ class TestHostFallback:
         """Unit widths > 32 silently fell back to host unpack before;
         now the fused decode raises HostFallbackWarning naming them."""
         from repro.core.codegen import random_codes
+        from repro.kernels.ops import reset_host_fallback_warnings
 
+        reset_host_fallback_warnings()
         p = self._problem()
         lay = schedule(p)
         buf = pack_compiled(lay, random_codes(p, seed=0))
@@ -173,6 +175,32 @@ class TestHostFallback:
         w = rec[0].message
         assert ("w", 40) in w.arrays
         assert "40" in str(w) and "w" in str(w.arrays[0])
+
+    def test_fallback_warns_once_per_layout_and_array(self):
+        """Serving loops decode the same layout thousands of times; the
+        fallback warning fires once per (layout signature, array), not
+        per call — and the reset helper re-arms it."""
+        import warnings
+
+        from repro.core.codegen import random_codes
+        from repro.kernels.ops import reset_host_fallback_warnings
+
+        reset_host_fallback_warnings()
+        p = self._problem()
+        lay = schedule(p)
+        buf = pack_compiled(lay, random_codes(p, seed=0))
+        with pytest.warns(HostFallbackWarning):
+            decode_layout_fused(lay, buf, interpret=True)
+        # further decodes of the same layout: silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", HostFallbackWarning)
+            decode_layout_fused(lay, buf, interpret=True)
+            decode_layout_fused(lay, buf, interpret=True)
+        # reset re-arms the warning for the same layout
+        reset_host_fallback_warnings()
+        with pytest.warns(HostFallbackWarning) as rec:
+            decode_layout_fused(lay, buf, interpret=True)
+        assert ("w", 40) in rec[0].message.arrays
 
     def test_stream_direct_serves_wide_units_natively(self):
         """The same layout lowered at *element* granularity (20-bit

@@ -1,0 +1,87 @@
+"""Direct unit tests for the shared core helpers (repro.core.util).
+
+``round_up`` and ``pad_bundle_elements`` used to live as private copies
+in exec_plan.py / packing.py / kernels; they are now one shared util —
+these tests pin the exact semantics every consumer relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.core.iris import schedule
+from repro.core.exec_plan import lower_exec
+from repro.core.packing import BundleTensor, bundle_problem
+from repro.core.util import pad_bundle_elements, round_up
+
+
+class TestRoundUp:
+    @pytest.mark.parametrize("x,to,want", [
+        (0, 8, 0), (1, 8, 8), (8, 8, 8), (9, 8, 16),
+        (1, 1, 1), (7, 1, 7),
+        (127, 128, 128), (128, 128, 128), (129, 128, 256),
+        (5, 3, 6), (6, 3, 6),
+    ])
+    def test_values(self, x, to, want):
+        assert round_up(x, to) == want
+
+    def test_result_is_multiple_and_minimal(self):
+        for x in range(0, 70):
+            for to in (1, 2, 3, 5, 8, 64):
+                r = round_up(x, to)
+                assert r % to == 0 and r >= x and r - x < to
+
+    @pytest.mark.parametrize("to", [0, -1, -8])
+    def test_nonpositive_to_raises(self, to):
+        with pytest.raises(ValueError, match="positive"):
+            round_up(4, to)
+
+    def test_shared_by_all_consumers(self):
+        """exec_plan and the kernels must use the one shared helper."""
+        import repro.core.exec_plan as ep
+        import repro.kernels.layout_decode as ld
+        import repro.kernels.stream_matmul as sm
+
+        assert ep._round_up is round_up
+        assert ld._round_up is round_up
+        assert sm._round_up is round_up
+
+
+class TestPadBundleElements:
+    def _setup(self, n_elems=100, width=5):
+        bundle = [BundleTensor("w", width, n_elems, 1),
+                  BundleTensor("w_scales", 16, n_elems // 4, 1)]
+        prob = bundle_problem(bundle, m=256)
+        lay = schedule(prob)
+        prog = lower_exec(lay, elem_widths=(width, 16))
+        return bundle, prob, lay, prog
+
+    def test_pads_to_piece_capacity(self):
+        bundle, prob, _lay, prog = self._setup()
+        data = {"w": np.arange(100, dtype=np.uint64) % 31,
+                "w_scales": np.arange(25, dtype=np.uint64)}
+        padded = pad_bundle_elements(prob, prog, data)
+        for i, a in enumerate(prob.arrays):
+            assert padded[a.name].shape[0] == prog.piece_depths[i]
+            n = data[a.name].shape[0]
+            np.testing.assert_array_equal(padded[a.name][:n], data[a.name])
+            assert not padded[a.name][n:].any()   # zero padding
+
+    def test_exact_fit_unchanged(self):
+        bundle, prob, _lay, prog = self._setup()
+        data = {"w": np.arange(prog.piece_depths[0], dtype=np.uint64) % 31,
+                "w_scales": np.zeros(prog.piece_depths[1], dtype=np.uint64)}
+        padded = pad_bundle_elements(prob, prog, data)
+        np.testing.assert_array_equal(padded["w"], data["w"])
+        assert padded["w"].shape[0] == prog.piece_depths[0]
+
+    def test_overfull_raises(self):
+        bundle, prob, _lay, prog = self._setup()
+        data = {"w": np.zeros(prog.piece_depths[0] + 1, dtype=np.uint64),
+                "w_scales": np.zeros(prog.piece_depths[1], dtype=np.uint64)}
+        with pytest.raises(ValueError):
+            pad_bundle_elements(prob, prog, data)
+
+    def test_packing_reexport_stays(self):
+        """repro.core.packing keeps the compat re-export."""
+        from repro.core.packing import pad_bundle_elements as via_packing
+
+        assert via_packing is pad_bundle_elements
