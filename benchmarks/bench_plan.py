@@ -1,0 +1,370 @@
+"""Planner scale-out bench: cold vs parallel vs incremental vs persistent
+planning, plus host vs device pack — and the compiled-exec bench that
+used to live inline in run.py.
+
+Two entry points, both gated on bit-equivalence (SystemExit(1) on any
+mismatch — CI runs them as correctness checks, not just timers):
+
+* :func:`run_exec` — compiled execution plans vs the per-slot legacy
+  paths on the §4 LM layer bundle (the old ``bench_exec``); writes
+  ``BENCH_exec.json``.
+* :func:`run` — the ISSUE-9 acceptance measurement; writes
+  ``BENCH_plan.json``:
+
+  - **parallel**: a 16-unique-signature mixed-precision stack (the LM
+    bundle with a per-layer ``attn_norm`` depth delta) through
+    ``schedule_many(workers=8)`` vs per-problem cold ``schedule()``.
+    On a multi-core box the speedup is pool fan-out; on a small
+    container ``_effective_workers`` clamps to the core count and the
+    speedup comes from warm-start chaining — ``workers_effective`` is
+    recorded so the number can be read in context.
+  - **incremental**: warm-start re-plan of a single-parameter-delta
+    neighbor vs a cold run of the same problem.
+  - **persistent**: a fresh ``LayoutCache(cache_dir=...)`` process-start
+    load (analysis-verified) per signature vs re-scheduling.
+  - **pack**: host ``pack_compiled`` vs the fused Pallas device pack
+    (``kernels.layout_pack``), same buffer bit-for-bit.
+
+All speedups are machine-relative: the absolute GB/s and wall-clocks
+move with the container, the equivalence flags must not.
+
+CLI:  PYTHONPATH=src python benchmarks/bench_plan.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _timeit_min(fn, repeats: int = 5, warmup: int = 1) -> float:
+    """Best-of-N in us — robust to container scheduler noise."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _bundle_problem(quick: bool):
+    from repro.core.packing import bundle_problem, layer_bundle_spec
+    from repro.quant import QuantSpec
+
+    if quick:
+        dims = 256, 512, 4, 2, 64
+    else:
+        dims = 576, 1536, 9, 3, 64              # smollm-135m
+    bundle = layer_bundle_spec(*dims, QuantSpec(bits=3, group_size=128))
+    return bundle, bundle_problem(bundle, m=512)
+
+
+# ----------------------------------------------------------------------
+# compiled exec plans vs per-slot legacy (formerly run.py bench_exec)
+# ----------------------------------------------------------------------
+def run_exec(quick: bool = False) -> dict:
+    """Compiled exec plans vs per-slot legacy paths (ISSUE-4 acceptance).
+
+    The §4 LM layer bundle (decoder-layer weight stream of an LM config,
+    3-bit weights + 16-bit scales/norms — the paper's custom-width
+    regime) on a 512-bit bus: scheduling units land on 30/32 bits, so
+    *every* path, legacy and compiled, applies and can be cross-checked
+    bit-for-bit, and the odd widths produce the interval-rich,
+    word-straddling layouts the per-slot paths are worst at:
+
+    * host pack: ``pack_arrays`` (one Python loop per interval/slot/lane)
+      vs ``pack_compiled`` (argsort'd OR-reduction, no Python loops);
+    * decode: per-unit ``decode_layout(fused=False)`` (one pallas_call +
+      dynamic_update_slice per unit) vs the fused single-kernel path;
+    * scheduler: fresh run vs LayoutCache hit (context for the JSON).
+
+    Writes BENCH_exec.json at the repo root; raises SystemExit(1) if the
+    compiled paths are not bit-identical to the legacy ones.
+    """
+    from repro import api
+    from repro.core.codegen import decode_plan, pack_arrays, random_codes
+    from repro.core.exec_plan import lower_exec
+    from repro.core.iris import LayoutCache, schedule
+    from repro.kernels.ops import decode_layout
+
+    _bundle, prob = _bundle_problem(quick)
+
+    # scheduler + cache context
+    t0 = time.perf_counter()
+    lay = schedule(prob, cache=None)
+    sched_us = (time.perf_counter() - t0) * 1e6
+    cache = LayoutCache()
+    schedule(prob, cache=cache)
+    t0 = time.perf_counter()
+    schedule(prob, cache=cache)
+    hit_us = (time.perf_counter() - t0) * 1e6
+
+    codes = random_codes(prob, seed=0)
+    useful_bytes = prob.p_tot / 8
+
+    # pack: legacy per-slot loop vs compiled (best-of-N: the container
+    # scheduler is noisy and the mean punishes the fast path most)
+    reps = 2 if quick else 3
+    pack_legacy_us = _timeit_min(lambda: pack_arrays(lay, codes),
+                                 repeats=reps, warmup=1)
+    t0 = time.perf_counter()
+    prog = lower_exec(lay)
+    lower_us = (time.perf_counter() - t0) * 1e6
+    pack_us = _timeit_min(lambda: api.pack_compiled(lay, codes, program=prog),
+                          repeats=5 * reps, warmup=1)
+    buf_legacy = pack_arrays(lay, codes)
+    buf = api.pack_compiled(lay, codes, program=prog)
+    pack_ok = bool(np.array_equal(buf_legacy, buf))
+
+    # decode: per-unit kernels vs one fused kernel (both interpret mode)
+    n_units = decode_plan(lay).n_units
+    t0 = time.perf_counter()
+    legacy_out = decode_layout(lay, buf, fused=False, interpret=True)
+    decode_legacy_us = (time.perf_counter() - t0) * 1e6
+    fused_out = decode_layout(lay, buf, fused=True, interpret=True,
+                              program=prog)              # trace + check
+    decode_us = _timeit_min(
+        lambda: decode_layout(lay, buf, fused=True, interpret=True,
+                              program=prog),
+        repeats=3, warmup=0)
+    decode_ok = all(
+        np.array_equal(np.asarray(fused_out[k]).astype(np.uint64), v)
+        and np.array_equal(np.asarray(legacy_out[k]).astype(np.uint64), v)
+        for k, v in codes.items()
+    )
+
+    _row("exec/pack_compiled", pack_us,
+         f"legacy_us={pack_legacy_us:.0f};speedup={pack_legacy_us/pack_us:.1f}x;"
+         f"GBps={useful_bytes/1e3/pack_us:.2f};identical={pack_ok}")
+    _row("exec/decode_fused", decode_us,
+         f"legacy_us={decode_legacy_us:.0f};"
+         f"speedup={decode_legacy_us/decode_us:.1f}x;"
+         f"rows_per_s={lay.c_max/(decode_us/1e6):.0f};"
+         f"units_fused={n_units}->1;identical={decode_ok}")
+
+    out = {
+        "quick": quick,
+        "problem": {
+            "name": "lm_layer_bundle_int3_m512",
+            "m": prob.m, "n_arrays": len(prob.arrays),
+            "p_tot_bits": prob.p_tot, "c_max": lay.c_max,
+            "decode_units_legacy": n_units,
+            "pieces": prog.n_pieces,
+            "kernel_lanes": prog.kernel.lanes,
+            "pallas_calls_fused": prog.n_pallas_calls,
+        },
+        "scheduler": {"schedule_us": sched_us, "cache_hit_us": hit_us},
+        "pack": {
+            "legacy_us": pack_legacy_us,
+            "compiled_us": pack_us,
+            "lower_us": lower_us,
+            "speedup": pack_legacy_us / pack_us,
+            "compiled_GBps": useful_bytes / 1e3 / pack_us,
+            "legacy_GBps": useful_bytes / 1e3 / pack_legacy_us,
+        },
+        "decode": {
+            "legacy_us": decode_legacy_us,
+            "fused_us": decode_us,
+            "speedup": decode_legacy_us / decode_us,
+            "fused_rows_per_s": lay.c_max / (decode_us / 1e6),
+            "legacy_rows_per_s": lay.c_max / (decode_legacy_us / 1e6),
+        },
+        "equivalence": {"pack_ok": pack_ok, "decode_ok": decode_ok},
+    }
+    (_ROOT / "BENCH_exec.json").write_text(json.dumps(out, indent=2) + "\n")
+    if not (pack_ok and decode_ok):
+        raise SystemExit(
+            "exec bench: compiled paths are NOT bit-identical to legacy"
+        )
+    return out
+
+
+# ----------------------------------------------------------------------
+# planner scale-out (ISSUE-9 acceptance)
+# ----------------------------------------------------------------------
+def _signature_stack(base, n: int):
+    """``n`` unique-signature variants of ``base``: per-layer attn_norm
+    depth deltas, each one scheduling-unit step from its neighbor (the
+    mixed-precision / per-layer-unique regime the ROADMAP targets)."""
+    from repro.core.task import ArraySpec, LayoutProblem
+
+    out = []
+    for i in range(n):
+        arrays = tuple(
+            ArraySpec(name=a.name, width=a.width, depth=a.depth + i,
+                      due=a.due, max_lanes=a.max_lanes)
+            if a.name == "attn_norm" else a
+            for a in base.arrays)
+        out.append(LayoutProblem(m=base.m, arrays=arrays))
+    return out
+
+
+def run(quick: bool = False) -> dict:
+    import repro.core.iris as iris_mod
+    from repro.core.exec_plan import lower_exec, pack_compiled
+    from repro.core.codegen import random_codes
+    from repro.core.iris import LayoutCache, schedule, schedule_many
+    from repro.kernels.layout_pack import pack_layout_fused
+
+    bundle, base = _bundle_problem(quick)
+    n_sigs = 16
+    stack = _signature_stack(base, n_sigs)
+    equiv: dict[str, bool] = {}
+
+    # (a) serial cold baseline: every signature from scratch, no cache
+    t0 = time.perf_counter()
+    cold = [schedule(p, cache=None, warm_start=False) for p in stack]
+    t_serial = time.perf_counter() - t0
+
+    # (b) schedule_many with 8 requested workers (pool fan-out where the
+    # container has cores; warm-start chaining either way)
+    par_cache = LayoutCache()
+    t0 = time.perf_counter()
+    par = schedule_many(stack, cache=par_cache, workers=8)
+    t_par = time.perf_counter() - t0
+    workers_eff = iris_mod._effective_workers(8, n_sigs)
+    equiv["parallel_ok"] = all(
+        a.count_intervals == b.count_intervals for a, b in zip(cold, par))
+    _row("plan/parallel_16sig", t_par * 1e6,
+         f"serial_us={t_serial*1e6:.0f};speedup={t_serial/t_par:.1f}x;"
+         f"workers_eff={workers_eff};warm_starts={par_cache.warm_starts};"
+         f"identical={equiv['parallel_ok']}")
+
+    # (c) incremental: one-parameter-delta neighbor, warm vs cold
+    neighbor = stack[1]
+    reps = 2 if quick else 3
+    t_cold = _timeit_min(
+        lambda: schedule(neighbor, cache=None, warm_start=False),
+        repeats=reps, warmup=0) / 1e6
+
+    def _warm():
+        c = LayoutCache()
+        c.insert(base, False, cold[0])
+        return schedule(neighbor, cache=c)
+
+    warm_lay = _warm()
+    t_warm = _timeit_min(_warm, repeats=reps, warmup=0) / 1e6
+    c_chk = LayoutCache()
+    c_chk.insert(base, False, cold[0])
+    schedule(neighbor, cache=c_chk)
+    equiv["incremental_ok"] = bool(
+        warm_lay.count_intervals == cold[1].count_intervals
+        and c_chk.warm_starts == 1)
+    _row("plan/incremental", t_warm * 1e6,
+         f"cold_us={t_cold*1e6:.0f};speedup={t_cold/t_warm:.1f}x;"
+         f"identical={equiv['incremental_ok']}")
+
+    # (d) persistent: fresh-cache load of analysis-verified entries
+    # (one untimed pass first so the one-off lazy analysis import is not
+    # billed to every signature; then best-of-N fresh readers, same
+    # noise convention as _timeit_min)
+    with tempfile.TemporaryDirectory() as d:
+        writer = LayoutCache(cache_dir=d)
+        for p, lay in zip(stack, cold):
+            writer.insert(p, False, lay)
+        warm_reader = LayoutCache(cache_dir=d)
+        warm_reader.lookup(stack[0])
+        # GC disabled during the timed region (the timeit convention):
+        # with JAX and the pool results live, gen0 collections otherwise
+        # bill the whole process heap to the load path
+        gc.collect()
+        gc.disable()
+        try:
+            t_load = float("inf")
+            for _ in range(reps + 1):
+                reader = LayoutCache(cache_dir=d)
+                t0 = time.perf_counter()
+                loaded = [reader.lookup(p) for p in stack]
+                t_load = min(t_load, time.perf_counter() - t0)
+        finally:
+            gc.enable()
+    equiv["persistent_ok"] = bool(
+        all(l is not None for l in loaded)
+        and all(l.count_intervals == c.count_intervals
+                for l, c in zip(loaded, cold))
+        and reader.disk_hits == n_sigs)
+    load_ms_per_sig = t_load * 1e3 / n_sigs
+    _row("plan/persistent_load", t_load * 1e6 / n_sigs,
+         f"ms_per_sig={load_ms_per_sig:.2f};"
+         f"vs_cold={t_serial/t_load:.0f}x;"
+         f"identical={equiv['persistent_ok']}")
+
+    # (e) pack: host numpy vs fused Pallas device kernel (unit
+    # granularity — every piece width <= 32, single pallas_call)
+    lay = cold[0]
+    codes = random_codes(base, seed=0)
+    prog = lower_exec(lay)
+    useful_bytes = base.p_tot / 8
+    host_us = _timeit_min(
+        lambda: pack_compiled(lay, codes, program=prog),
+        repeats=5 * reps, warmup=1)
+    buf_host = pack_compiled(lay, codes, program=prog)
+    buf_dev = pack_layout_fused(lay, codes, program=prog)   # trace + check
+    dev_us = _timeit_min(
+        lambda: pack_layout_fused(lay, codes, program=prog),
+        repeats=5 * reps, warmup=0)
+    equiv["pack_ok"] = bool(np.array_equal(buf_host, buf_dev))
+    _row("plan/pack_device", dev_us,
+         f"host_us={host_us:.0f};speedup={host_us/dev_us:.1f}x;"
+         f"GBps={useful_bytes/1e3/dev_us:.2f};"
+         f"host_GBps={useful_bytes/1e3/host_us:.2f};"
+         f"identical={equiv['pack_ok']}")
+
+    out = {
+        "quick": quick,
+        "stack": {
+            "n_signatures": n_sigs, "m": base.m,
+            "n_arrays": len(base.arrays), "c_max": lay.c_max,
+        },
+        "parallel": {
+            "serial_cold_s": t_serial, "schedule_many_s": t_par,
+            "speedup": t_serial / t_par,
+            "workers_requested": 8, "workers_effective": workers_eff,
+            "warm_starts": par_cache.warm_starts,
+        },
+        "incremental": {
+            "cold_s": t_cold, "warm_s": t_warm,
+            "speedup": t_cold / t_warm,
+        },
+        "persistent": {
+            "load_ms_per_signature": load_ms_per_sig,
+            "total_load_s": t_load,
+            "speedup_vs_cold": t_serial / t_load,
+        },
+        "pack": {
+            "host_us": host_us, "device_us": dev_us,
+            "speedup": host_us / dev_us,
+            "host_GBps": useful_bytes / 1e3 / host_us,
+            "device_GBps": useful_bytes / 1e3 / dev_us,
+        },
+        "equivalence": equiv,
+    }
+    (_ROOT / "BENCH_plan.json").write_text(json.dumps(out, indent=2) + "\n")
+    if not all(equiv.values()):
+        bad = [k for k, v in equiv.items() if not v]
+        raise SystemExit(f"plan bench: bit-equivalence FAILED: {bad}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--exec-only", action="store_true",
+                    help="run only the compiled-exec half")
+    args = ap.parse_args()
+    run_exec(quick=args.quick)
+    if not args.exec_only:
+        run(quick=args.quick)

@@ -18,6 +18,13 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
                            writes machine-readable BENCH_exec.json at the
                            repo root and exits nonzero if the compiled
                            paths are not bit-identical to the legacy ones
+                           (see bench_plan.py)
+  bench_plan             — planner scale-out: cold vs parallel vs
+                           incremental vs persistent planning on a
+                           16-unique-signature stack + host vs device
+                           pack; writes BENCH_plan.json and exits
+                           nonzero on any bit-equivalence mismatch
+                           (see bench_plan.py)
   bench_stream_matmul    — stream-direct matmul (decode fused into the
                            compute prologue) vs the two-pass path on the
                            int3 LM layer bundle; writes
@@ -338,130 +345,26 @@ def bench_scheduler_throughput() -> None:
 
 
 def bench_exec() -> None:
-    """Compiled exec plans vs per-slot legacy paths (ISSUE-4 acceptance).
+    """Compiled exec plans vs per-slot legacy paths + bit-identity gate
+    (full bench in bench_plan.py; writes BENCH_exec.json)."""
+    import sys
 
-    The §4 LM layer bundle (decoder-layer weight stream of an LM config,
-    3-bit weights + 16-bit scales/norms — the paper's custom-width
-    regime) on a 512-bit bus: scheduling units land on 30/32 bits, so
-    *every* path, legacy and compiled, applies and can be cross-checked
-    bit-for-bit, and the odd widths produce the interval-rich,
-    word-straddling layouts the per-slot paths are worst at:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from bench_plan import run_exec as _exec_run
 
-    * host pack: ``pack_arrays`` (one Python loop per interval/slot/lane)
-      vs ``pack_compiled`` (argsort'd OR-reduction, no Python loops);
-    * decode: per-unit ``decode_layout(fused=False)`` (one pallas_call +
-      dynamic_update_slice per unit) vs the fused single-kernel path;
-    * scheduler: fresh run vs LayoutCache hit (context for the JSON).
+    _exec_run(quick=QUICK)
 
-    Writes BENCH_exec.json at the repo root; raises SystemExit(1) if the
-    compiled paths are not bit-identical to the legacy ones.
-    """
-    from repro import api
-    from repro.core.codegen import pack_arrays, random_codes
-    from repro.core.exec_plan import lower_exec
-    from repro.core.iris import LayoutCache, schedule
-    from repro.core.packing import bundle_problem, layer_bundle_spec
-    from repro.kernels.ops import decode_layout
-    from repro.quant import QuantSpec
 
-    if QUICK:
-        d_model, d_ff, heads, kv, hd = 256, 512, 4, 2, 64
-    else:
-        d_model, d_ff, heads, kv, hd = 576, 1536, 9, 3, 64  # smollm-135m
-    bundle = layer_bundle_spec(d_model, d_ff, heads, kv, hd,
-                               QuantSpec(bits=3, group_size=128))
-    prob = bundle_problem(bundle, m=512)
+def bench_plan() -> None:
+    """Planner scale-out: cold vs parallel vs incremental vs persistent
+    planning + host vs device pack, all bit-equivalence gated (full
+    bench in bench_plan.py; writes BENCH_plan.json)."""
+    import sys
 
-    # scheduler + cache context
-    t0 = time.perf_counter()
-    lay = schedule(prob, cache=None)
-    sched_us = (time.perf_counter() - t0) * 1e6
-    cache = LayoutCache()
-    schedule(prob, cache=cache)
-    t0 = time.perf_counter()
-    schedule(prob, cache=cache)
-    hit_us = (time.perf_counter() - t0) * 1e6
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from bench_plan import run as _plan_run
 
-    codes = random_codes(prob, seed=0)
-    useful_bytes = prob.p_tot / 8
-
-    # pack: legacy per-slot loop vs compiled (best-of-N: the container
-    # scheduler is noisy and the mean punishes the fast path most)
-    reps = 2 if QUICK else 3
-    pack_legacy_us = _timeit_min(lambda: pack_arrays(lay, codes),
-                                 repeats=reps, warmup=1)
-    t0 = time.perf_counter()
-    prog = lower_exec(lay)
-    lower_us = (time.perf_counter() - t0) * 1e6
-    pack_us = _timeit_min(lambda: api.pack_compiled(lay, codes, program=prog),
-                          repeats=5 * reps, warmup=1)
-    buf_legacy = pack_arrays(lay, codes)
-    buf = api.pack_compiled(lay, codes, program=prog)
-    pack_ok = bool(np.array_equal(buf_legacy, buf))
-
-    # decode: per-unit kernels vs one fused kernel (both interpret mode)
-    from repro.core.codegen import decode_plan
-
-    n_units = decode_plan(lay).n_units
-    t0 = time.perf_counter()
-    legacy_out = decode_layout(lay, buf, fused=False, interpret=True)
-    decode_legacy_us = (time.perf_counter() - t0) * 1e6
-    fused_out = decode_layout(lay, buf, fused=True, interpret=True,
-                              program=prog)              # trace + check
-    decode_us = _timeit_min(
-        lambda: decode_layout(lay, buf, fused=True, interpret=True,
-                              program=prog),
-        repeats=3, warmup=0)
-    decode_ok = all(
-        np.array_equal(np.asarray(fused_out[k]).astype(np.uint64), v)
-        and np.array_equal(np.asarray(legacy_out[k]).astype(np.uint64), v)
-        for k, v in codes.items()
-    )
-
-    _row("exec/pack_compiled", pack_us,
-         f"legacy_us={pack_legacy_us:.0f};speedup={pack_legacy_us/pack_us:.1f}x;"
-         f"GBps={useful_bytes/1e3/pack_us:.2f};identical={pack_ok}")
-    _row("exec/decode_fused", decode_us,
-         f"legacy_us={decode_legacy_us:.0f};"
-         f"speedup={decode_legacy_us/decode_us:.1f}x;"
-         f"rows_per_s={lay.c_max/(decode_us/1e6):.0f};"
-         f"units_fused={n_units}->1;identical={decode_ok}")
-
-    out = {
-        "quick": QUICK,
-        "problem": {
-            "name": "lm_layer_bundle_int3_m512",
-            "m": prob.m, "n_arrays": len(prob.arrays),
-            "p_tot_bits": prob.p_tot, "c_max": lay.c_max,
-            "decode_units_legacy": n_units,
-            "pieces": prog.n_pieces,
-            "kernel_lanes": prog.kernel.lanes,
-            "pallas_calls_fused": prog.n_pallas_calls,
-        },
-        "scheduler": {"schedule_us": sched_us, "cache_hit_us": hit_us},
-        "pack": {
-            "legacy_us": pack_legacy_us,
-            "compiled_us": pack_us,
-            "lower_us": lower_us,
-            "speedup": pack_legacy_us / pack_us,
-            "compiled_GBps": useful_bytes / 1e3 / pack_us,
-            "legacy_GBps": useful_bytes / 1e3 / pack_legacy_us,
-        },
-        "decode": {
-            "legacy_us": decode_legacy_us,
-            "fused_us": decode_us,
-            "speedup": decode_legacy_us / decode_us,
-            "fused_rows_per_s": lay.c_max / (decode_us / 1e6),
-            "legacy_rows_per_s": lay.c_max / (decode_legacy_us / 1e6),
-        },
-        "equivalence": {"pack_ok": pack_ok, "decode_ok": decode_ok},
-    }
-    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_exec.json"
-    path.write_text(json.dumps(out, indent=2) + "\n")
-    if not (pack_ok and decode_ok):
-        raise SystemExit(
-            "exec bench: compiled paths are NOT bit-identical to legacy"
-        )
+    _plan_run(quick=QUICK)
 
 
 def bench_stream_matmul() -> None:
@@ -499,6 +402,7 @@ ALL = [
     bench_scheduler_scale,
     bench_scheduler_throughput,
     bench_exec,
+    bench_plan,
     bench_stream_matmul,
     bench_serve,
 ]

@@ -48,8 +48,27 @@ __all__ = [
     "AnalysisContext", "AnalysisError", "Finding", "Report", "Severity",
     "PASSES", "run_passes", "stream_sha256",
     "DEFAULT_B_EFF_WARN", "DEFAULT_PAD_WARN",
-    "verify_layout", "verify_program", "verify_manifest", "verify_tree",
+    "LAYOUT_ONLY_PASSES",
+    "verify_layout", "verify_layout_fast", "verify_program",
+    "verify_manifest", "verify_tree",
 ]
+
+#: Passes that consume the layout alone — no ExecProgram, no lowering.
+LAYOUT_ONLY_PASSES: tuple[str, ...] = ("interval", "bandwidth")
+
+
+def verify_layout_fast(layout: Layout, *, subject: str = "",
+                       b_eff_warn: float = DEFAULT_B_EFF_WARN) -> Report:
+    """Layout-only verification: the interval-legality and bandwidth
+    passes, skipping exec lowering entirely.
+
+    Lowering costs seconds on model-scale layouts; this path is
+    O(intervals) and is what the persistent
+    :class:`~repro.core.iris.LayoutCache` tier runs on every load before
+    an entry is trusted (millisecond budget per signature).
+    """
+    ctx = AnalysisContext(layout=layout, b_eff_warn=b_eff_warn)
+    return run_passes(ctx, LAYOUT_ONLY_PASSES, subject=subject or "layout")
 
 
 def verify_layout(layout: Layout, *,

@@ -136,10 +136,50 @@ def _info(rule: str, msg: str, *, array: str = "", locus: str = "",
 @register_pass("interval")
 def interval_pass(ctx: AnalysisContext) -> Iterable[Finding]:
     """Per-cycle legality of the interval-native layout, reimplemented
-    independently of :meth:`Layout.validate` (findings, not asserts)."""
+    independently of :meth:`Layout.validate` (findings, not asserts).
+
+    A vectorized screen decides the common (legal) case in O(slots)
+    numpy; only a layout that fails the screen takes the per-run Python
+    walk that localizes the findings.  The persistent
+    :class:`~repro.core.iris.LayoutCache` tier runs this pass on every
+    disk load, so the legal-case cost is on the planning fast path.
+    """
     lay = ctx.layout
     if lay is None:
         return
+    if not _interval_screen(lay):
+        return
+    yield from _interval_walk(lay)
+
+
+def _interval_screen(lay) -> bool:
+    """True if the layout *might* be illegal (run the localizing walk).
+
+    Checks the same facts as the walk, in bulk: slot array indices in
+    range, per-run bit usage within the bus, per-array scheduled element
+    totals equal to depths.  Slot bit ranges are assigned sequentially
+    from offset 0, so overlap is equivalent to bus overflow and needs no
+    separate screen.
+    """
+    prob = lay.problem
+    n_arrays = len(prob.arrays)
+    run_id, arrs, cnts, taus = lay.flat_counts()
+    if not arrs.size:
+        return any(a.depth for a in prob.arrays)
+    if ((arrs < 0) | (arrs >= n_arrays)).any():
+        return True
+    widths = np.asarray([a.width for a in prob.arrays], dtype=np.int64)
+    used = np.zeros(len(lay.count_intervals), dtype=np.int64)
+    np.add.at(used, run_id, cnts * widths[arrs])
+    if (used > prob.m).any():
+        return True
+    scheduled = np.zeros(n_arrays, dtype=np.int64)
+    np.add.at(scheduled, arrs, cnts * taus[run_id])
+    depths = np.asarray([a.depth for a in prob.arrays], dtype=np.int64)
+    return bool((scheduled != depths).any())
+
+
+def _interval_walk(lay) -> Iterable[Finding]:
     prob = lay.problem
     scheduled = [0] * len(prob.arrays)
     t = 0

@@ -296,14 +296,27 @@ class Plan:
 
     # -- uniform execution surface -------------------------------------
     def pack(self, arrays: dict[str, np.ndarray], *,
-             compiled: bool = True) -> np.ndarray:
-        """Host-side organization (paper Listing 1): pack per-array codes
-        into the unified ``(c_max, m/8)`` uint8 buffer.
+             compiled: bool = True, backend: str = "numpy") -> np.ndarray:
+        """Pack per-array codes into the unified ``(c_max, m/8)`` buffer
+        (paper Listing 1).
 
-        ``compiled=True`` (default) runs the vectorized
-        :class:`~repro.core.exec_plan.ExecProgram`; ``compiled=False``
-        runs the legacy per-slot reference path.  Both are bit-identical.
+        ``backend="numpy"`` (default) packs host-side: the vectorized
+        :class:`~repro.core.exec_plan.ExecProgram` when ``compiled=True``,
+        the legacy per-slot reference path otherwise.
+        ``backend="pallas"`` runs the fused device pack kernel
+        (:func:`~repro.kernels.layout_pack.pack_layout_fused`, imported
+        lazily so this module stays importable without JAX).  All paths
+        are bit-identical.
         """
+        if backend == "pallas":
+            from repro.kernels.layout_pack import pack_layout_fused
+
+            return pack_layout_fused(self.layout, arrays,
+                                     program=self.exec_program)
+        if backend != "numpy":
+            raise NotImplementedError(
+                f"backend {backend!r} cannot pack; use 'numpy' or 'pallas'"
+            )
         if compiled:
             return pack_compiled(self.layout, arrays,
                                  program=self.exec_program)

@@ -237,6 +237,13 @@ class CheckpointManager:
         :class:`~repro.tree.LayoutManifest` rides in the checkpoint
         manifest JSON, so restore *rebinds* the layout instead of
         re-scheduling.
+
+        The stream bytes are whatever :func:`repro.tree.pack_tree`
+        produced — build the tree with ``pack_backend="pallas"`` to pack
+        them with the fused device kernel
+        (:func:`repro.kernels.layout_pack.pack_layout_fused`); the
+        buffers are bit-identical either way, so the digest and restore
+        path are backend-agnostic.
         """
         if pt.streams is None:
             raise ValueError(

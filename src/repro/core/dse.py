@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from typing import Callable, Sequence
 
-from .iris import DEFAULT_CACHE, LayoutCache
+from .iris import DEFAULT_CACHE, LayoutCache, schedule_many
 from .layout import LayoutMetrics
 from .task import LayoutProblem, make_problem
 
@@ -24,15 +24,28 @@ from .task import LayoutProblem, make_problem
 def sweep_strategies(problems: Sequence[LayoutProblem],
                      strategies: Sequence[str] | None = None,
                      cache: LayoutCache | None = DEFAULT_CACHE,
+                     workers: int | None = None,
                      ) -> list[dict[str, LayoutMetrics]]:
     """Metrics for every problem x registered strategy.
 
     Iterates the façade's strategy registry (all registered strategies
     unless narrowed), returning one ``{strategy: LayoutMetrics}`` dict
     per problem in input order.
+
+    The Iris column is pre-solved through the parallel
+    :func:`~repro.core.iris.schedule_many` (pool fan-out over unique
+    signatures, warm-start chaining, serial fallback), so a sweep over N
+    unique problems no longer re-plans them one by one inside the
+    compare loop — the loop then runs entirely on cache hits.  Results
+    are bit-identical either way because the engine is deterministic in
+    every mode.  ``workers`` caps the pool (``None`` = one per core).
     """
     from repro import api
 
+    if strategies is None or "iris" in strategies:
+        if cache is None:
+            cache = LayoutCache(maxsize=max(1, len(problems)))
+        schedule_many(list(problems), cache=cache, workers=workers)
     return [
         api.compare(p, strategies=strategies, cache=cache) for p in problems
     ]

@@ -504,3 +504,73 @@ def unpack_compiled(layout: Layout, buf: np.ndarray, *,
     out = prog.unpack_indexed(np.asarray(buf))
     names = [a.name for a in layout.problem.arrays]
     return {names[i]: v for i, v in out.items()}
+
+
+# ----------------------------------------------------------------------
+# device pack tables (the inverse of the KernelTable direction)
+# ----------------------------------------------------------------------
+def pack_kernel_tables(prog: ExecProgram,
+                       ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Gather-only contribution tables for the fused device pack kernel.
+
+    The host pack (:meth:`ExecProgram.pack_indexed`) scatters piece
+    contributions into destination words; scatters are pathological on
+    the XLA CPU backend, so the device kernel inverts the mapping at
+    lowering time: for every destination u32 word (``words32`` per row,
+    :meth:`ExecProgram.buffer_words32` view) we precompute the <= K
+    source pieces that contribute to it and the shift each needs.
+
+    Returns ``(src, scode, K)`` where ``src``/``scode`` are
+    ``(c_max, words32 * K)`` int32 tables.  ``src`` indexes a flat
+    piece-order stream vector with a zero sentinel at index 0 (entry 0 =
+    empty contribution slot, piece ``p`` stored as ``p + 1``);
+    ``scode >= 0`` means shift left, ``< 0`` shift right (the hi part of
+    a u32-straddling piece).  The kernel computes, per word,
+    ``OR_k shift(flat[src_k], scode_k)`` — pure gathers, rank layers
+    vectorized across the whole tile.  Memoized on the program
+    (``jit_cache``), so the one-time numpy build is paid once per layout
+    signature and shared across :class:`LayoutCache` rebinds.
+    """
+    key = ("pack_tables",)
+    cached = prog.jit_cache.get(key)
+    if cached is not None:
+        return cached
+    kt = prog.kernel
+    w32 = kt.words32
+    if not kt.gathers:
+        empty = (np.zeros((prog.c_max, 0), dtype=np.int32),
+                 np.zeros((prog.c_max, 0), dtype=np.int32), 1)
+        prog.jit_cache[key] = empty
+        return empty
+    ids = np.concatenate([
+        np.arange(prog.piece_base[i], prog.piece_base[i + 1])
+        for i, _g in kt.gathers])
+    word = prog.word[ids].astype(np.int64)
+    rows = word // prog.wpr
+    bit = (word - rows * prog.wpr) * 64 + prog.shift[ids].astype(np.int64)
+    widths = np.empty(ids.shape[0], dtype=np.int64)
+    for i, _g in kt.gathers:
+        sel = (ids >= prog.piece_base[i]) & (ids < prog.piece_base[i + 1])
+        widths[sel] = prog.elem_widths[i]
+    w0 = bit >> 5
+    sh = bit & 31
+    strad = sh + widths > 32
+    # contribution list: (destination u32 word, source piece, shift code);
+    # a straddling piece contributes twice, its hi part right-shifted
+    gw = np.concatenate([rows * w32 + w0, (rows * w32 + w0 + 1)[strad]])
+    src = np.concatenate([ids, ids[strad]])
+    sc = np.concatenate([sh, sh[strad] - 32])
+    order = np.argsort(gw, kind="stable")
+    gw, src, sc = gw[order], src[order], sc[order]
+    new_seg = np.concatenate([[True], gw[1:] != gw[:-1]])
+    seg_starts = np.flatnonzero(new_seg)
+    rank = np.arange(gw.shape[0]) - seg_starts[np.cumsum(new_seg) - 1]
+    k = int(rank.max()) + 1 if rank.size else 1
+    src_t = np.zeros(prog.c_max * w32 * k, dtype=np.int32)
+    sc_t = np.zeros(prog.c_max * w32 * k, dtype=np.int32)
+    src_t[gw * k + rank] = src + 1          # 0 = empty slot sentinel
+    sc_t[gw * k + rank] = sc
+    tables = (src_t.reshape(prog.c_max, w32 * k),
+              sc_t.reshape(prog.c_max, w32 * k), k)
+    prog.jit_cache[key] = tables
+    return tables

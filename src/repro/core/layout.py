@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from .task import LayoutProblem
 
 # A per-cycle slot structure: ((array_index, elems_per_cycle), ...) lane order.
@@ -82,27 +84,46 @@ class Layout:
     """A complete bus layout in due-date space, interval-native."""
 
     def __init__(self, problem: LayoutProblem,
-                 count_intervals: Sequence[tuple[int, Counts]]) -> None:
+                 count_intervals: Sequence[tuple[int, Counts]], *,
+                 _normalized: bool = False) -> None:
         """``count_intervals`` are (n_cycles, counts) runs in final cycle order.
 
         Element indices are assigned sequentially per array in cycle order;
         bit offsets are packed LSB-first in slot order.
+
+        ``_normalized=True`` asserts the runs are already in canonical
+        form — int-valued (n, ((a, e), ...)) tuples with n > 0 and every
+        e > 0 — and skips the per-entry rebuild.  Only the scheduler and
+        cache paths, whose runs are canonical by construction, set it;
+        ``_build_intervals`` still bounds- and coverage-checks either way.
         """
         self.problem = problem
         # immutable so layouts can be shared safely (e.g. cache hits
         # handing out the same object to many callers)
-        self.count_intervals: tuple[tuple[int, Counts], ...] = tuple(
-            (int(n), tuple((int(a), int(e)) for a, e in counts if e > 0))
-            for n, counts in count_intervals
-            if n > 0
-        )
+        if _normalized:
+            self.count_intervals = tuple(count_intervals)
+        else:
+            self.count_intervals = tuple(
+                (int(n), tuple((int(a), int(e)) for a, e in counts if e > 0))
+                for n, counts in count_intervals
+                if n > 0
+            )
         self._intervals: list[Interval] | None = None
         self._cycles: list[list[Segment]] | None = None
         # lowered execution programs (repro.core.exec_plan), keyed by
         # piece-width tuple; shared across rebinds (programs are
         # name-free), so a LayoutCache hit never re-lowers
         self._exec_cache: dict[tuple, object] = {}
-        self._build_intervals()
+        # vectorized replay tables for warm-started re-planning
+        # (repro.core.iris._schedule_warm); name-free like the exec
+        # programs, so rebinds share them too
+        self._replay_cache: dict[str, object] = {}
+        self._flat: tuple | None = None
+        # legality (bus overflow, per-array coverage, array-index bounds)
+        # is proven vectorized at construction; the Python Interval list
+        # is materialized lazily on first intervals() access, so paths
+        # that never enumerate slots (cache loads, metrics) skip it
+        self._check_intervals_fast()
 
     # ------------------------------------------------------------------
     # construction helpers
@@ -129,9 +150,10 @@ class Layout:
     @staticmethod
     def from_count_intervals(problem: LayoutProblem,
                              intervals: Sequence[tuple[int, Counts]],
-                             reverse: bool = False) -> "Layout":
+                             reverse: bool = False, *,
+                             _normalized: bool = False) -> "Layout":
         seq = list(reversed(intervals)) if reverse else list(intervals)
-        return Layout(problem, seq)
+        return Layout(problem, seq, _normalized=_normalized)
 
     def rebind(self, problem: LayoutProblem) -> "Layout":
         """Re-attach this layout to ``problem`` without re-scheduling.
@@ -147,9 +169,75 @@ class Layout:
             raise ValueError(
                 "rebind target is a different scheduling instance"
             )
-        lay = Layout(problem, self.count_intervals)
+        lay = Layout(problem, self.count_intervals, _normalized=True)
         lay._exec_cache = self._exec_cache
+        lay._replay_cache = self._replay_cache
+        # intervals and flat views are name-free — share them too
+        lay._intervals = self._intervals
+        lay._flat = self._flat
         return lay
+
+    def flat_counts(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        """``(run_id, array_id, count, taus)`` int64 views of the count
+        runs, one entry per (run, slot).  Memoized — shared by the
+        constructor legality check and the analysis interval screen so
+        the Python flatten happens once per layout."""
+        if self._flat is None:
+            run_id: list[int] = []
+            arrs: list[int] = []
+            cnts: list[int] = []
+            for r, (_n, counts) in enumerate(self.count_intervals):
+                for a, e in counts:
+                    run_id.append(r)
+                    arrs.append(a)
+                    cnts.append(e)
+            self._flat = (
+                np.asarray(run_id, dtype=np.int64),
+                np.asarray(arrs, dtype=np.int64),
+                np.asarray(cnts, dtype=np.int64),
+                np.asarray([n for n, _c in self.count_intervals],
+                           dtype=np.int64),
+            )
+        return self._flat
+
+    def _check_intervals_fast(self) -> None:
+        """Vectorized legality proof: every run fits the bus and every
+        array is scheduled to exactly its depth.  Same error classes as
+        the slot-by-slot build (IndexError on out-of-range array ids,
+        ValueError on overflow / coverage), at numpy cost."""
+        prob = self.problem
+        run_np, arr_np, cnt_np, taus = self.flat_counts()
+        n_arrays = len(prob.arrays)
+        depths = np.asarray([a.depth for a in prob.arrays], dtype=np.int64)
+        if not arr_np.size:
+            bad = int(np.argmax(depths != 0)) if (depths != 0).any() else -1
+            if bad >= 0:
+                raise ValueError(
+                    f"array {prob.arrays[bad].name}: scheduled 0 of "
+                    f"{prob.arrays[bad].depth} elements"
+                )
+            return
+        if ((arr_np >= n_arrays) | (arr_np < -n_arrays)).any():
+            raise IndexError("array index out of range")
+        widths = np.asarray([a.width for a in prob.arrays], dtype=np.int64)
+        used = np.zeros(len(self.count_intervals), dtype=np.int64)
+        np.add.at(used, run_np, cnt_np * widths[arr_np])
+        if (used > prob.m).any():
+            r = int(np.argmax(used > prob.m))
+            t = sum(n for n, _c in self.count_intervals[:r])
+            raise ValueError(
+                f"interval at cycle {t} overflows the bus: "
+                f"{int(used[r])} > {prob.m} bits"
+            )
+        scheduled = np.zeros(n_arrays, dtype=np.int64)
+        np.add.at(scheduled, arr_np, cnt_np * taus[run_np])
+        if (scheduled != depths).any():
+            i = int(np.argmax(scheduled != depths))
+            raise ValueError(
+                f"array {prob.arrays[i].name}: scheduled {int(scheduled[i])} "
+                f"of {prob.arrays[i].depth} elements"
+            )
 
     def _build_intervals(self) -> None:
         prob = self.problem
@@ -166,19 +254,8 @@ class Layout:
                 base.append(next_elem[array])
                 next_elem[array] += n * n_cycles
                 offset += n * spec.width
-            if offset > prob.m:
-                raise ValueError(
-                    f"interval at cycle {t} overflows the bus: "
-                    f"{offset} > {prob.m} bits"
-                )
             out.append(Interval(t, n_cycles, tuple(slots), tuple(base)))
             t += n_cycles
-        for i, spec in enumerate(prob.arrays):
-            if next_elem[i] != spec.depth:
-                raise ValueError(
-                    f"array {spec.name}: scheduled {next_elem[i]} of "
-                    f"{spec.depth} elements"
-                )
         self._intervals = out
 
     # ------------------------------------------------------------------
@@ -238,6 +315,8 @@ class Layout:
         return sum(n for n, _ in self.count_intervals)
 
     def intervals(self) -> list[Interval]:
+        if self._intervals is None:
+            self._build_intervals()
         assert self._intervals is not None
         return self._intervals
 

@@ -30,6 +30,7 @@ from .layout_decode import (  # noqa: F401  (HostFallbackWarning re-export)
     decode_slot,
     reset_host_fallback_warnings,
 )
+from .layout_pack import pack_layout_fused  # noqa: F401  (re-export)
 from .packed_matmul import packed_matmul  # noqa: F401  (re-export)
 from .stream_matmul import (  # noqa: F401  (re-exports)
     stream_matmul,

@@ -447,7 +447,8 @@ def pack_tree(cfg, params: dict, spec: QuantSpec, *, m: int = 4096,
               strategy: str = "iris",
               cache: LayoutCache | None = DEFAULT_CACHE,
               with_streams: bool = True,
-              with_kernel_views: bool | None = None) -> PackedTree:
+              with_kernel_views: bool | None = None,
+              pack_backend: str = "numpy") -> PackedTree:
     """Quantize + plan + pack a parameter tree in one call.
 
     The front door the ISSUE's consumers share: serving
@@ -468,6 +469,13 @@ def pack_tree(cfg, params: dict, spec: QuantSpec, *, m: int = 4096,
     serve through :meth:`PackedTree.matmul_direct`, which reads the
     stream buffers directly, so the whole 2..8-bit range is end-to-end
     servable.  Forcing ``True`` for a non-lane width raises.
+
+    ``pack_backend`` selects how the per-layer stream rows are packed:
+    ``"numpy"`` (default) is the vectorized host
+    :func:`~repro.core.exec_plan.pack_compiled`; ``"pallas"`` the fused
+    device kernel (:func:`~repro.kernels.layout_pack.pack_layout_fused`)
+    — bit-identical, so ``save_packed`` checkpoints are byte-equal
+    either way.
     """
     from repro import api  # deferred: repro.api lazy-loads this module
     from repro.models.quantized import quantizable  # deferred: no cycle
@@ -549,6 +557,18 @@ def pack_tree(cfg, params: dict, spec: QuantSpec, *, m: int = 4096,
                 f"{spec.scale_dtype!r} is not 16-bit"
             )
         prog = stack.exec_program()
+        if pack_backend == "pallas":
+            from repro.kernels.layout_pack import pack_layout_fused
+
+            def _pack_row(data):
+                return pack_layout_fused(lay, data, program=prog)
+        elif pack_backend == "numpy":
+            def _pack_row(data):
+                return pack_compiled(lay, data, program=prog)
+        else:
+            raise NotImplementedError(
+                f"pack_backend {pack_backend!r}; use 'numpy' or 'pallas'"
+            )
         scales16 = {k[len("attn/"):] if k.startswith("attn/")
                     else k[len("mlp/"):]: _bits16(v)
                     for k, v in scales.items()}
@@ -559,7 +579,7 @@ def pack_tree(cfg, params: dict, spec: QuantSpec, *, m: int = 4096,
             data = _layer_element_data(stack.bundle, codes, scales16,
                                        norms16, layer)
             padded = pad_bundle_elements(stack.problem, prog, data)
-            rows.append(pack_compiled(lay, padded, program=prog))
+            rows.append(_pack_row(padded))
         streams = jnp.asarray(np.stack(rows))
 
     pt = PackedTree(packed=packed, scales=scales, other=other,

@@ -1,0 +1,180 @@
+"""Fused device pack kernel: bit-identity with the host pack paths.
+
+The contract is absolute: ``pack_layout_fused`` returns byte-for-byte
+the buffer ``pack_compiled`` (and transitively the legacy
+``pack_arrays``) produces, for every granularity, straddle pattern, and
+host-width fallback.  Round-trips close the loop through the fused
+decode kernel.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.codegen import pack_arrays, random_codes
+from repro.core.exec_plan import (
+    lower_exec,
+    pack_compiled,
+    pack_kernel_tables,
+)
+from repro.core.iris import schedule
+from repro.core.task import PAPER_EXAMPLE, make_problem
+from repro.kernels.layout_decode import decode_layout_fused
+from repro.kernels.layout_pack import pack_layout_fused
+
+
+def _identical(problem, *, elem_widths=None, seed=0, codes=None):
+    lay = schedule(problem, cache=None)
+    if codes is None:
+        codes = random_codes(problem, seed=seed)
+    prog = lower_exec(lay, elem_widths)
+    ref = pack_compiled(lay, codes, program=prog)
+    out = pack_layout_fused(lay, codes, program=prog)
+    assert out.dtype == ref.dtype and out.shape == ref.shape
+    assert np.array_equal(ref, out)
+    return lay, prog, codes, ref
+
+
+def test_paper_example_identical():
+    lay, _prog, codes, buf = _identical(PAPER_EXAMPLE)
+    # and against the legacy per-slot packer
+    assert np.array_equal(buf, pack_arrays(lay, codes))
+
+
+def test_word_straddling_widths_identical():
+    # odd widths force contributions that straddle u32 word boundaries
+    p = make_problem(96, [("a", 3, 300, 4), ("b", 7, 150, 9),
+                          ("c", 11, 90, 2), ("d", 30, 41, 7)])
+    _identical(p)
+
+
+def test_randomized_small_problems_identical():
+    rng = np.random.default_rng(0)
+    for trial in range(12):
+        m = int(rng.choice([8, 32, 64, 128]))
+        n = int(rng.integers(1, 6))
+        specs = [(f"a{i}", int(rng.integers(1, min(m, 17))),
+                  int(rng.integers(1, 200)), int(rng.integers(0, 30)))
+                 for i in range(n)]
+        _identical(make_problem(m, specs), seed=trial)
+
+
+def test_element_granularity_identical():
+    # sub-element pieces: 24-bit elements lowered as 8-bit pieces
+    p = make_problem(64, [("x", 24, 50, 3), ("y", 8, 120, 6)])
+    lay = schedule(p, cache=None)
+    prog = lower_exec(lay, elem_widths=(8, 8))
+    rng = np.random.default_rng(1)
+    data = {"x": rng.integers(0, 1 << 8, prog.piece_depths[0],
+                              dtype=np.uint64),
+            "y": rng.integers(0, 1 << 8, prog.piece_depths[1],
+                              dtype=np.uint64)}
+    ref = pack_compiled(lay, data, program=prog)
+    out = pack_layout_fused(lay, data, program=prog)
+    assert np.array_equal(ref, out)
+
+
+def test_host_width_fallback_identical_and_warns():
+    p = make_problem(128, [("wide", 48, 40, 5), ("narrow", 8, 100, 5)])
+    lay = schedule(p, cache=None)
+    codes = random_codes(p, seed=2)
+    ref = pack_compiled(lay, codes)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        from repro.kernels import layout_pack
+
+        layout_pack.reset_host_fallback_warnings()
+        out = pack_layout_fused(lay, codes)
+    assert np.array_equal(ref, out)
+    assert any("host" in str(x.message) for x in w)
+    # warned once per (layout, array): a second pack stays quiet
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        pack_layout_fused(lay, codes)
+    assert not any("host" in str(x.message) for x in w2)
+
+
+def test_all_host_width_problem():
+    p = make_problem(128, [("w1", 40, 30, 2), ("w2", 48, 25, 5)])
+    lay = schedule(p, cache=None)
+    codes = random_codes(p, seed=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        out = pack_layout_fused(lay, codes)
+    assert np.array_equal(pack_compiled(lay, codes), out)
+
+
+def test_roundtrip_through_fused_decode():
+    p = make_problem(64, [("a", 5, 200, 4), ("b", 12, 80, 8)])
+    lay = schedule(p, cache=None)
+    codes = random_codes(p, seed=4)
+    buf = pack_layout_fused(lay, codes)
+    back = decode_layout_fused(lay, buf)
+    for k, v in codes.items():
+        assert np.array_equal(np.asarray(back[k]).astype(np.uint64), v)
+
+
+def test_input_validation_mirrors_pack_compiled():
+    lay = schedule(PAPER_EXAMPLE, cache=None)
+    codes = random_codes(PAPER_EXAMPLE, seed=0)
+    missing = dict(codes)
+    name = next(iter(missing))
+    del missing[name]
+    with pytest.raises(KeyError):
+        pack_layout_fused(lay, missing)
+    short = dict(codes)
+    short[name] = codes[name][:-1]
+    with pytest.raises(ValueError):
+        pack_layout_fused(lay, short)
+    over = dict(codes)
+    width = next(a.width for a in PAPER_EXAMPLE.arrays if a.name == name)
+    if width < 64:
+        over[name] = codes[name] | np.uint64(1 << width)
+        with pytest.raises(ValueError):
+            pack_layout_fused(lay, over)
+
+
+def test_pack_tables_memoized_and_jit_reused():
+    p = make_problem(32, [("a", 4, 100, 3), ("b", 6, 60, 7)])
+    lay = schedule(p, cache=None)
+    prog = lower_exec(lay)
+    t1 = pack_kernel_tables(prog)
+    t2 = pack_kernel_tables(prog)
+    assert t1 is t2
+    codes = random_codes(p, seed=5)
+    pack_layout_fused(lay, codes, program=prog)
+    fn1 = prog.jit_cache.get(("pack", 4096, True))
+    pack_layout_fused(lay, codes, program=prog)
+    assert prog.jit_cache.get(("pack", 4096, True)) is fn1
+    # a rebound layout (cache hit) shares the program and hence the trace
+    rebound = lay.rebind(make_problem(
+        32, [("x", 4, 100, 3), ("y", 6, 60, 7)]))
+    assert lower_exec(rebound) is prog
+
+
+def test_api_plan_pack_backend():
+    from repro import api
+
+    pl = api.plan(PAPER_EXAMPLE, cache=None)
+    codes = random_codes(PAPER_EXAMPLE, seed=6)
+    host = pl.pack(codes)
+    dev = pl.pack(codes, backend="pallas")
+    assert np.array_equal(host, dev)
+    with pytest.raises(NotImplementedError):
+        pl.pack(codes, backend="no-such-backend")
+
+
+def test_ops_reexport():
+    from repro.kernels import ops
+
+    assert ops.pack_layout_fused is pack_layout_fused
+
+
+def test_tile_rows_do_not_change_bits():
+    p = make_problem(64, [("a", 3, 500, 4), ("b", 9, 200, 11)])
+    lay = schedule(p, cache=None)
+    codes = random_codes(p, seed=7)
+    ref = pack_compiled(lay, codes)
+    for tile in (8, 64, 4096):
+        out = pack_layout_fused(lay, codes, tile_rows=tile)
+        assert np.array_equal(ref, out), tile

@@ -95,7 +95,8 @@ def test_cache_hit_returns_same_layout_object():
     lay2 = schedule(PAPER_EXAMPLE, cache=cache)
     assert lay2 is lay1
     assert cache.stats == {"hits": 1, "misses": 1, "size": 1,
-                           "maxsize": 256}
+                           "maxsize": 256, "warm_starts": 0,
+                           "disk_hits": 0, "disk_rejects": 0}
 
 
 def test_cache_is_name_independent_and_rebinds():
