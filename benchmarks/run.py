@@ -33,6 +33,11 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
                            latency/goodput sweep + bit-identity vs the
                            single-stream loop on the int3 smollm tree;
                            writes BENCH_serve.json (see bench_serve.py)
+  bench_kvcache          — packed KV-cache streams: stream-direct decode
+                           attention vs the dense-dequant oracle
+                           (bit-identity gated), append-never-replans
+                           accounting, KV bandwidth model; writes
+                           BENCH_kvcache.json (see bench_kvcache.py)
 
 CLI:  python benchmarks/run.py [--quick] [--only SUBSTR]
 """
@@ -389,6 +394,18 @@ def bench_serve() -> None:
     _serve_run(quick=QUICK)
 
 
+def bench_kvcache() -> None:
+    """Packed KV-cache streams: stream-direct attention vs dense oracle
+    + append-never-replans gate (full bench in bench_kvcache.py; writes
+    BENCH_kvcache.json)."""
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from bench_kvcache import run as _kvcache_run
+
+    _kvcache_run(quick=QUICK)
+
+
 ALL = [
     bench_example_layout,
     bench_inv_helmholtz,
@@ -405,6 +422,7 @@ ALL = [
     bench_plan,
     bench_stream_matmul,
     bench_serve,
+    bench_kvcache,
 ]
 
 

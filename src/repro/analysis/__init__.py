@@ -21,6 +21,12 @@ Entry points (all return a :class:`Report`; none raises unless asked):
   (``restore_packed`` runs this before rebinding).
 * :func:`verify_tree` — a whole :class:`~repro.tree.PackedTree`
   (``PackedTree.verify()`` routes here).
+* :func:`verify_kvcache` — a :class:`~repro.kvcache.PackedKVCache`:
+  layout + tables proof plus the mutable-stream checks (token write-mask
+  disjointness/coverage, page geometry and digest, per-page append
+  idempotence).  ``PackedKVCache.verify()`` routes here, and
+  ``verify_packed``/``restore_kv`` on the checkpoint manager extend the
+  gate to KV pages stored on disk.
 
 The package imports numpy only; JAX-side objects (manifests, trees) are
 consumed duck-typed so the CLI and CI gate run without a device.
@@ -48,13 +54,21 @@ __all__ = [
     "AnalysisContext", "AnalysisError", "Finding", "Report", "Severity",
     "PASSES", "run_passes", "stream_sha256",
     "DEFAULT_B_EFF_WARN", "DEFAULT_PAD_WARN",
-    "LAYOUT_ONLY_PASSES",
+    "LAYOUT_ONLY_PASSES", "KVCACHE_PASSES",
     "verify_layout", "verify_layout_fast", "verify_program",
-    "verify_manifest", "verify_tree",
+    "verify_manifest", "verify_tree", "verify_kvcache",
 ]
 
 #: Passes that consume the layout alone — no ExecProgram, no lowering.
 LAYOUT_ONLY_PASSES: tuple[str, ...] = ("interval", "bandwidth")
+
+#: Passes a packed KV-cache runs: the weight-tree ``manifest`` pass is
+#: replaced by the KV-specific one (a KVManifest has no count-intervals
+#: or quant-group shapes to check).
+KVCACHE_PASSES: tuple[str, ...] = (
+    "interval", "program", "kernel", "stream", "extraction", "bandwidth",
+    "kvcache",
+)
 
 
 def verify_layout_fast(layout: Layout, *, subject: str = "",
@@ -148,6 +162,39 @@ def verify_manifest(manifest: Any, *,
         streams=None if streams is None else np.asarray(streams),
         stream_digest=stream_digest)
     sub = run_passes(ctx, passes, subject=subject)
+    report.findings.extend(sub.findings)
+    report.passes = sub.passes
+    return report
+
+
+def verify_kvcache(kvc: Any, *, pages_digest: str | None = None,
+                   passes: Iterable[str] | None = None,
+                   subject: str = "") -> Report:
+    """Verify a :class:`~repro.kvcache.PackedKVCache`: the layout its
+    manifest rebinds, the lowered tables, and the mutable-stream facts
+    the append path depends on (see the ``kvcache`` pass).
+
+    ``pages_digest``: expected sha256 of the page words (recorded by
+    ``CheckpointManager.save_packed(..., kv=...)``); checked when given.
+    A manifest that cannot rebind a layout degrades to a finding, and
+    the geometry/digest checks still run.
+    """
+    man = kvc.manifest
+    subject = subject or \
+        f"PackedKVCache[int{man.bits}/pt{man.page_tokens}]"
+    report = Report(subject=subject)
+    layout = program = None
+    try:
+        layout = kvc.layout
+        program = kvc.program()
+    except (ValueError, AssertionError) as e:
+        report.findings.append(Finding(
+            "kvcache/rebind", Severity.ERROR,
+            f"KV manifest does not rebind a layout: {e}"))
+    ctx = AnalysisContext(layout=layout, program=program, kvcache=kvc,
+                          stream_digest=pages_digest)
+    sub = run_passes(ctx, KVCACHE_PASSES if passes is None else passes,
+                     subject=subject)
     report.findings.extend(sub.findings)
     report.passes = sub.passes
     return report

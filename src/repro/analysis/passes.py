@@ -31,6 +31,12 @@ Pass catalog (rule ids are ``"<pass>/<check>"``):
                  stream byte-lengths, content digest.
 ``bandwidth``  — the paper's efficiency metric as lint: B_eff, wasted
                  bits, scheduling-unit padding, staging alignment.
+``kvcache``    — a PackedKVCache and its append tables: per-token write
+                 masks pairwise disjoint and exactly covering the
+                 in-range piece bits (padding never written), page
+                 geometry/digest vs the KV manifest, and per-page
+                 append idempotence (unpack-then-repack reproduces the
+                 page bytes exactly).
 
 All arithmetic is exact: positions are int64 bit indices (stream sizes
 are < 2^32 bits by construction, enforced by the ``stream`` pass).
@@ -39,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
 from typing import Any, Callable, Iterable
 
 import numpy as np
@@ -69,6 +76,8 @@ class AnalysisContext:
     streams: np.ndarray | None = None
     #: expected sha256 hexdigest of ``streams`` bytes (checkpoint extra)
     stream_digest: str | None = None
+    #: a :class:`repro.kvcache.PackedKVCache` (duck-typed, like manifest)
+    kvcache: Any = None
     b_eff_warn: float = DEFAULT_B_EFF_WARN
     pad_warn: float = DEFAULT_PAD_WARN
 
@@ -629,6 +638,179 @@ def bandwidth_pass(ctx: AnalysisContext) -> Iterable[Finding]:
                               hint="" if frac <= ctx.pad_warn else
                               "shrink the scheduling unit (lanes_target) "
                               "or repack the tensor")
+
+
+# ----------------------------------------------------------------------
+# packed KV-cache: mutable-stream safety
+# ----------------------------------------------------------------------
+def _popcount32(x: np.ndarray) -> np.ndarray:
+    """Per-element popcount of a uint32 array (SWAR, wrap-on-overflow)."""
+    x = x.astype(np.uint32)
+    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2))
+                                       & np.uint32(0x33333333))
+    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> np.uint32(24)).astype(np.int64)
+
+
+def _expected_write_mask(ctx: AnalysisContext, logical) -> np.ndarray:
+    """(c_max, words32) u32 bits every *in-range* piece occupies, derived
+    from the piece tables directly (independent of the append tables'
+    pack-table inversion)."""
+    prog = ctx.program
+    row, bit_in_row, widths = ctx.piece_positions()
+    n_arr = len(prog.piece_depths)
+    base = np.asarray(prog.piece_base, dtype=np.int64)
+    arr_id = np.repeat(np.arange(n_arr), np.diff(base))
+    local = np.arange(prog.n_pieces) - base[arr_id]
+    in_range = local < np.asarray(logical, dtype=np.int64)[arr_id]
+    w32 = prog.kernel.words32
+    r, b, w = row[in_range], bit_in_row[in_range], widths[in_range]
+    q, sh = np.divmod(b, 32)
+    m64 = ((np.uint64(1) << w.astype(np.uint64)) - np.uint64(1)) \
+        << sh.astype(np.uint64)
+    exp = np.zeros((prog.c_max, w32), np.uint64)
+    np.bitwise_or.at(exp, (r, q), m64 & np.uint64(0xFFFFFFFF))
+    hi = m64 >> np.uint64(32)
+    has_hi = (hi != 0) & (q + 1 < w32)   # row-seam pieces already flagged
+    np.bitwise_or.at(exp, (r[has_hi], q[has_hi] + 1), hi[has_hi])
+    return exp.astype(np.uint32)
+
+
+@register_pass("kvcache")
+def kvcache_pass(ctx: AnalysisContext) -> Iterable[Finding]:
+    """Mutable-stream safety for a packed KV-cache: the masked-RMW append
+    path is only sound if (a) per-token write masks are pairwise
+    disjoint, (b) their union is exactly the in-range piece bits (so
+    padding is never written and every payload bit has exactly one
+    owner), and (c) a page's bytes are a fixed point of
+    unpack-then-repack (appends compose with the static pack tables).
+    Geometry and content digest are checked against the KV manifest."""
+    kvc = ctx.kvcache
+    if kvc is None:
+        return
+    man = kvc.manifest
+    try:
+        prob = man.problem()
+    except Exception as e:  # corrupt bundle spec
+        yield _err("kvcache/bundle",
+                   f"KV bundle spec does not build a problem: {e}")
+        return
+    # KV signatures are stored JSON-canonical (strings survive the
+    # checkpoint-extra round trip; tuples would come back as lists)
+    if json.dumps(prob.canonical_signature()) != man.signature:
+        yield _err("kvcache/signature",
+                   "KV manifest signature does not match its bundle "
+                   "problem",
+                   hint="manifest is corrupt or from an incompatible "
+                        "version; do not rebind")
+    pages = np.asarray(kvc.host_pages())
+    want = (man.n_layers, man.n_slots, man.n_pages, man.c_max, man.words32)
+    if pages.dtype != np.uint32 or tuple(pages.shape) != want:
+        yield _err("kvcache/pages-shape",
+                   f"page buffer {pages.dtype}{tuple(pages.shape)} != "
+                   f"uint32{want} (n_layers, n_slots, n_pages, c_max, "
+                   "words32)",
+                   hint="pages truncated or from a different KV layout")
+        return
+    if ctx.stream_digest is not None:
+        got = stream_sha256(pages)
+        if got != ctx.stream_digest:
+            yield _err("kvcache/pages-digest",
+                       f"KV page content digest {got[:16]}... does not "
+                       f"match recorded {ctx.stream_digest[:16]}...",
+                       hint="page words were corrupted in storage or "
+                            "transit")
+    prog = ctx.program
+    if prog is None:
+        return
+
+    from repro.kvcache.layout import append_tables  # numpy-only module
+
+    try:
+        tabs = append_tables(prog, page_tokens=man.page_tokens,
+                             logical=man.logical())
+    except (ValueError, AssertionError) as e:
+        yield _err("kvcache/append-tables",
+                   f"append tables do not derive from the program: {e}")
+        return
+    mk = tabs.maskbits                       # (c_max, words32, K) u32
+    union = np.zeros(mk.shape[:2], np.uint32)
+    popsum = np.zeros(mk.shape[:2], np.int64)
+    for kk in range(tabs.K):
+        union |= mk[:, :, kk]
+        popsum += _popcount32(mk[:, :, kk])
+    clash = popsum != _popcount32(union)
+    if clash.any():
+        r, q = np.argwhere(clash)[0]
+        yield _err("kvcache/mask-overlap",
+                   f"{int(clash.sum())} destination words have "
+                   "overlapping token write masks (first: row "
+                   f"{int(r)}, word {int(q)})",
+                   hint="two appends would clobber each other's bits; "
+                        "the RMW append path is unsound")
+    pad_write = (tabs.tok < 0) & (mk != 0)
+    if pad_write.any():
+        yield _err("kvcache/padding-write",
+                   f"{int(pad_write.sum())} contributions write bits "
+                   "owned by residual padding (token id -1)",
+                   hint="appends would dirty pad bits, breaking the "
+                        "zero-page idempotence invariant")
+    exp = _expected_write_mask(ctx, man.logical())
+    if (union != exp).any():
+        bad = union != exp
+        r, q = np.argwhere(bad)[0]
+        yield _err("kvcache/mask-coverage",
+                   f"token mask union differs from the in-range piece "
+                   f"bits in {int(bad.sum())} words (first: row "
+                   f"{int(r)}, word {int(q)})",
+                   hint="append tables and piece tables disagree on "
+                        "which bits are payload")
+
+    # pages start zeroed and appends are masked, so every bit outside
+    # the in-range payload mask must still be zero — this catches writes
+    # into residual-fill pieces and bus slack alike, which the pack
+    # tables would happily reproduce (so idempotence alone cannot)
+    stray = pages & ~exp
+    if stray.any():
+        n_bad = int(_popcount32(stray).sum())
+        first = tuple(int(x) for x in np.argwhere(stray)[0])
+        yield _err("kvcache/stray-bits",
+                   f"{n_bad} page bits set outside the in-range payload "
+                   f"mask (first word: {first})",
+                   hint="an append escaped its token mask or the pages "
+                        "were corrupted; reads would see garbage after "
+                        "the next overwrite")
+
+    # append idempotence over sampled pages: unpack -> repack must be a
+    # byte fixed point (pages start zeroed and appends are masked, so
+    # every non-payload bit is 0 and pack_indexed reproduces the page)
+    nl, ns, npg = pages.shape[:3]
+    coords = [(layer, s, p) for layer in range(nl) for s in range(ns)
+              for p in range(npg)]
+    coords.sort(key=lambda t: not pages[t].any())   # nonzero pages first
+    n_elem = len(prog.elem_widths)
+    for t in coords[:6]:
+        u8 = np.ascontiguousarray(pages[t]).view(np.uint8) \
+            .reshape(man.c_max, man.words32 * 4)
+        tail = u8[:, man.row_bytes:]
+        if tail.any():
+            yield _err("kvcache/row-padding",
+                       f"page {t}: u32-view row padding bytes are "
+                       "nonzero",
+                       hint="writes escaped the bus row; the pack view "
+                            "and the DMA view disagree")
+            continue
+        buf = np.ascontiguousarray(u8[:, :man.row_bytes])
+        flat = prog.buffer_words64(buf)
+        streams = [prog.unpack_array(flat, i) for i in range(n_elem)]
+        back = prog.pack_indexed(streams)
+        if not np.array_equal(np.asarray(back, np.uint8), buf):
+            yield _err("kvcache/idempotence",
+                       f"page {t}: pack(unpack(page)) differs from the "
+                       "page bytes",
+                       hint="append left bits the static pack tables "
+                            "cannot reproduce; the page is corrupt")
 
 
 # ----------------------------------------------------------------------

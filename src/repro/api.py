@@ -593,6 +593,7 @@ def plan_layer_stack(cfg, qspec, *, m: int = 4096,
                      n_layers: int | None = None, mode: str = "auto",
                      strategy: str = "iris",
                      cache: LayoutCache | None = DEFAULT_CACHE,
+                     bundle=None,
                      ) -> LayerStackPlan:
     """Plan the per-layer weight-stream layouts for a model config.
 
@@ -605,11 +606,18 @@ def plan_layer_stack(cfg, qspec, *, m: int = 4096,
     uniform stack poses the same scheduling instance: ``"iris"`` costs
     one scheduler run (or zero on a warm cache) plus N-1 rebinds;
     baseline strategies are closed-form and computed once outright.
+
+    ``bundle`` overrides the scheduled tensor set: any sequence of
+    :class:`~repro.core.packing.BundleTensor` replaces the default
+    per-layer weight bundle while keeping the shared planning/cache
+    path — how ``repro.kvcache`` plans its per-page KV stream once and
+    rebinds it across every layer's pages.
     """
     from .core.packing import bundle_problem, layer_bundle_spec  # lazy
 
-    bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
-                               cfg.n_kv_heads, cfg.head_dim, qspec)
+    if bundle is None:
+        bundle = layer_bundle_spec(cfg.d_model, cfg.d_ff, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim, qspec)
     prob = bundle_problem(bundle, m=m)
     n = int(cfg.n_layers if n_layers is None else n_layers)
     if n <= 0:

@@ -224,9 +224,12 @@ class CheckpointManager:
     _PACKED_KEY = "packed_tree_manifest"
     _SKELETON_KEY = "packed_tree_skeleton"
     _DIGEST_KEY = "packed_stream_sha256"
+    _KV_KEY = "packed_kv_manifest"
+    _KV_DIGEST_KEY = "packed_kv_sha256"
 
     def save_packed(self, step: int, pt: Any,
-                    extra: dict | None = None) -> str:
+                    extra: dict | None = None, *,
+                    kv: Any = None) -> str:
         """Save a :class:`repro.tree.PackedTree` — packed bytes only.
 
         What hits disk is the per-layer unified Iris stream buffers
@@ -244,6 +247,13 @@ class CheckpointManager:
         (:func:`repro.kernels.layout_pack.pack_layout_fused`); the
         buffers are bit-identical either way, so the digest and restore
         path are backend-agnostic.
+
+        ``kv`` (optional): a :class:`repro.kvcache.PackedKVCache` —
+        its packed page words are saved alongside the weight streams
+        with their own manifest and content digest, so a mid-stream
+        serving snapshot round-trips (``restore_kv``) and decode
+        continues bit-identically.  Checkpoints written without ``kv``
+        (including all pre-KV checkpoints) load unchanged.
         """
         if pt.streams is None:
             raise ValueError(
@@ -256,6 +266,8 @@ class CheckpointManager:
             "streams": np.asarray(pt.streams),
             "other": jax.tree.map(lambda x: np.asarray(x), pt.other),
         }
+        if kv is not None:
+            payload["kv_pages"] = np.asarray(kv.pages)
         skeleton, _ = _skeletonize(payload)
         merged = dict(extra or {})
         merged[self._PACKED_KEY] = pt.manifest.to_json_dict()
@@ -263,15 +275,22 @@ class CheckpointManager:
         # content digest of the stream bytes: layout tables cannot see
         # bit-flips, so restore verifies the bytes themselves
         merged[self._DIGEST_KEY] = stream_sha256(payload["streams"])
+        if kv is not None:
+            merged[self._KV_KEY] = kv.manifest.to_json_dict()
+            merged[self._KV_DIGEST_KEY] = stream_sha256(
+                payload["kv_pages"])
         return self.save(step, payload, merged)
 
     def _load_packed(self, step: int | None):
         """Load a packed checkpoint's pieces without rebinding anything.
 
-        Returns ``(tree_manifest, payload, extra, digest)`` where
-        ``payload`` holds the host leaves (``streams`` / ``other``) and
-        ``digest`` is the recorded stream sha256 (``None`` for packed
-        checkpoints from before digests were stored).
+        Returns ``(tree_manifest, payload, extra, digest, kv_manifest,
+        kv_digest)`` where ``payload`` holds the host leaves
+        (``streams`` / ``other`` / optionally ``kv_pages``), ``digest``
+        is the recorded stream sha256 (``None`` for packed checkpoints
+        from before digests were stored), and the kv pair is the raw
+        :class:`~repro.kvcache.KVManifest` JSON dict + page digest
+        (both ``None`` when the checkpoint carries no KV pages).
         """
         from repro.tree import LayoutManifest
 
@@ -289,6 +308,8 @@ class CheckpointManager:
             extra.pop(self._PACKED_KEY))
         skeleton = extra.pop(self._SKELETON_KEY)
         digest = extra.pop(self._DIGEST_KEY, None)
+        kv_manifest = extra.pop(self._KV_KEY, None)
+        kv_digest = extra.pop(self._KV_DIGEST_KEY, None)
         leaves = []
         for meta in manifest["leaves"]:
             arr = np.load(d / meta["file"])
@@ -297,7 +318,7 @@ class CheckpointManager:
                 arr = arr.view(want_dtype)
             leaves.append(arr)
         payload = _unskeletonize(skeleton, leaves)
-        return tree_manifest, payload, extra, digest
+        return tree_manifest, payload, extra, digest, kv_manifest, kv_digest
 
     def verify_packed(self, step: int | None = None):
         """Statically verify a packed checkpoint **without restoring it**.
@@ -306,15 +327,52 @@ class CheckpointManager:
         the stored manifest, intervals, stream byte-lengths and content
         digest; returns the :class:`~repro.analysis.Report` (never
         raises on findings — this is the inspection surface;
-        :meth:`restore_packed` is the one that refuses).
+        :meth:`restore_packed` is the one that refuses).  When the
+        checkpoint carries KV pages, the KV-cache pass set
+        (:func:`repro.analysis.verify_kvcache`) runs too and its
+        findings merge into the same report — ``python -m repro.analysis
+        ckpt`` therefore gates a mid-stream KV snapshot as well.
         """
         from repro.analysis import verify_manifest
 
-        tree_manifest, payload, _extra, digest = self._load_packed(step)
-        return verify_manifest(
+        tree_manifest, payload, _extra, digest, kv_man, kv_digest = \
+            self._load_packed(step)
+        report = verify_manifest(
             tree_manifest, streams=payload["streams"],
             stream_digest=digest,
             subject=f"ckpt[{self.root.name}/{tree_manifest.arch}]")
+        if kv_man is not None:
+            sub = self._verify_kv(payload, kv_man, kv_digest)
+            report.findings.extend(sub.findings)
+            report.passes.extend(p for p in sub.passes
+                                 if p not in report.passes)
+        return report
+
+    def _rebuild_kv(self, payload: dict, kv_man: dict):
+        """KV pieces -> a host-backed :class:`PackedKVCache`."""
+        import jax.numpy as jnp
+
+        from repro.kvcache import KVManifest, PackedKVCache
+
+        return PackedKVCache(
+            jnp.asarray(payload["kv_pages"], jnp.uint32),
+            KVManifest.from_json_dict(kv_man),
+            provenance="checkpoint")
+
+    def _verify_kv(self, payload: dict, kv_man: dict,
+                   kv_digest: str | None):
+        from repro.analysis import Finding, Report, Severity, verify_kvcache
+
+        if "kv_pages" not in payload:
+            r = Report(subject=f"ckpt[{self.root.name}/kv]")
+            r.findings.append(Finding(
+                "kvcache/pages-missing", Severity.ERROR,
+                "checkpoint records a KV manifest but stores no "
+                "kv_pages leaf"))
+            return r
+        return verify_kvcache(
+            self._rebuild_kv(payload, kv_man), pages_digest=kv_digest,
+            subject=f"ckpt[{self.root.name}/kv]")
 
     def restore_packed(self, step: int | None = None, *,
                        cache: Any = _DEFAULT_CACHE_SENTINEL,
@@ -339,7 +397,8 @@ class CheckpointManager:
         """
         from repro.tree import unpack_streams
 
-        tree_manifest, payload, extra, digest = self._load_packed(step)
+        tree_manifest, payload, extra, digest, _kv_man, _kv_digest = \
+            self._load_packed(step)
         if verify:
             from repro.analysis import verify_manifest
 
@@ -353,3 +412,25 @@ class CheckpointManager:
         pt = unpack_streams(tree_manifest, payload["streams"],
                             payload["other"], cache=cache)
         return pt, extra
+
+    def restore_kv(self, step: int | None = None, *,
+                   verify: bool = True) -> Any:
+        """Restore the :class:`repro.kvcache.PackedKVCache` a packed
+        checkpoint carries (``save_packed(..., kv=...)``).
+
+        Returns ``None`` when the checkpoint has no KV pages (every
+        pre-KV checkpoint), so callers can probe without a try/except.
+        With ``verify=True`` the KV-cache analysis pass set must come
+        back clean (page geometry, content digest, write-mask soundness,
+        append idempotence) before the cache is handed out — a corrupted
+        snapshot raises :class:`~repro.analysis.AnalysisError` instead
+        of decoding garbage attention.
+        """
+        _man, payload, _extra, _digest, kv_man, kv_digest = \
+            self._load_packed(step)
+        if kv_man is None:
+            return None
+        kvc = self._rebuild_kv(payload, kv_man)
+        if verify:
+            self._verify_kv(payload, kv_man, kv_digest).raise_if_errors()
+        return kvc

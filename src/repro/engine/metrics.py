@@ -97,6 +97,7 @@ class EngineMetrics:
         self.active_row_steps = 0        # sum over steps of active slots
         self.tokens_generated = 0
         self.stream_bytes = 0            # host->device stream upload bytes
+        self.uploader_stats: dict = {}   # latest StreamUploader.stats()
         self._t0: float | None = None    # first submit (throughput window)
         self._t_last: float | None = None
 
@@ -156,6 +157,11 @@ class EngineMetrics:
     def record_stream_bytes(self, n: int) -> None:
         self.stream_bytes += n
 
+    def record_uploader_stats(self, stats: dict) -> None:
+        """Latest :meth:`StreamUploader.stats` counters (cumulative on
+        the uploader side, so last-write-wins is the right merge)."""
+        self.uploader_stats = dict(stats)
+
     # -- aggregation ----------------------------------------------------
     def _phase(self, attr: str) -> dict:
         xs = [getattr(t, attr) for t in self.timings.values()
@@ -201,6 +207,7 @@ class EngineMetrics:
                 "mean_batch_occupancy": batch,
                 "stream_bytes": self.stream_bytes,
                 "stream_bytes_per_s": self.stream_bytes / elapsed,
+                "uploader": dict(self.uploader_stats),
             },
         }
 

@@ -111,9 +111,14 @@ class EngineConfig:
 # model adapters
 # ----------------------------------------------------------------------
 def _reset_state_slot(state: dict, i: int) -> None:
-    """Zero slot ``i``'s clock and recurrent state in place.  KV caches
-    need no clearing: the per-row position mask hides stale entries."""
+    """Zero slot ``i``'s clock and recurrent state in place.  Dense KV
+    caches need no clearing: the per-row position mask hides stale
+    entries.  Packed KV pages *are* cleared so page digests (and the
+    checkpoint bytes built from them) are deterministic regardless of
+    which request previously occupied the slot."""
     state["pos"] = state["pos"].at[i].set(0)
+    if "packed_kv" in state:
+        state["packed_kv"] = state["packed_kv"].reset(i)
     if "ssm" in state:
         state["ssm"] = state["ssm"].at[:, :, i].set(0.0)
     if "rwkv" in state:
@@ -172,21 +177,51 @@ class PackedAdapter:
     :class:`~repro.engine.streams.StreamUploader` instead of resident
     device buffers — the next layer's transfer overlaps this layer's
     matmuls.
+
+    ``kv="packed"`` swaps the dense per-slot K/V caches for a
+    :class:`~repro.kvcache.PackedKVCache`: quantized token pages in the
+    Iris-planned stream layout, appended through the device pack tables
+    and consumed by the stream-direct attention kernel
+    (``kv_attention="dense"`` keeps the packed pages but decodes them to
+    a dense oracle first — the bit-identity verification path).
     """
 
     def __init__(self, cfg, tree, *, weights: str = "auto",
-                 interpret: bool = True, uploader=None) -> None:
+                 interpret: bool = True, uploader=None,
+                 kv: str = "dense", kv_attention: str = "stream",
+                 kv_bits: int | None = None, page_tokens: int = 8,
+                 kv_m: int = 512) -> None:
         from repro.models.model import Model
 
+        if kv not in ("dense", "packed"):
+            raise ValueError(f"kv must be 'dense' or 'packed', got {kv!r}")
+        if kv_attention not in ("stream", "dense"):
+            raise ValueError(
+                f"kv_attention must be 'stream' or 'dense', "
+                f"got {kv_attention!r}")
         self.cfg = cfg
         self.tree = tree
         self.weights = weights
         self.interpret = interpret
         self.uploader = uploader
+        self.kv = kv
+        self.kv_attention = kv_attention
+        self.kv_bits = kv_bits
+        self.page_tokens = page_tokens
+        self.kv_m = kv_m
         self._model = Model(cfg, remat="none")
 
     def init_state(self, batch_size: int, max_seq: int) -> dict:
-        return self._model.init_decode_state(batch_size, max_seq)
+        state = self._model.init_decode_state(batch_size, max_seq)
+        if self.kv == "packed":
+            from repro.kvcache import PackedKVCache
+
+            bits = self.kv_bits if self.kv_bits is not None \
+                else self.tree.spec.bits
+            state["packed_kv"] = PackedKVCache.create(
+                self.cfg, bits=bits, page_tokens=self.page_tokens,
+                n_slots=batch_size, max_seq=max_seq, m=self.kv_m)
+        return state
 
     def reset_slot(self, state: dict, i: int) -> None:
         _reset_state_slot(state, i)
@@ -201,11 +236,15 @@ class PackedAdapter:
             self.cfg, self.tree, state, jnp.asarray(tokens, jnp.int32),
             interpret=self.interpret, weights=self.weights,
             slot_ids=jnp.asarray(list(active), jnp.int32),
-            stream_source=self.uploader)
+            stream_source=self.uploader,
+            kv=self.kv, kv_attention=self.kv_attention)
         return np.asarray(logits, np.float32), state
 
     def stream_bytes_uploaded(self) -> int | None:
         return self.uploader.bytes_uploaded if self.uploader else None
+
+    def uploader_stats(self) -> dict | None:
+        return self.uploader.stats() if self.uploader else None
 
 
 # ----------------------------------------------------------------------
@@ -236,6 +275,17 @@ class Engine:
             config.max_backlog, clock=clock)
         self.metrics = metrics if metrics is not None \
             else EngineMetrics(clock=clock)
+        # a fresh engine starts with a clean host-fallback dedup slate:
+        # warnings a previous engine's run already surfaced must fire
+        # again for this one, or a long-lived process silently reuses
+        # host fallbacks across unrelated serving sessions
+        try:
+            from repro.kernels import layout_decode, layout_pack
+        except ImportError:              # pragma: no cover - needs jax
+            pass
+        else:
+            layout_decode.reset_host_fallback_warnings()
+            layout_pack.reset_host_fallback_warnings()
         self.state = adapter.init_state(config.batch_size, config.max_seq)
         self.slots: list[EngineRequest | None] = [None] * config.batch_size
         self.slot_pos = np.zeros(config.batch_size, dtype=np.int64)
@@ -334,6 +384,10 @@ class Engine:
             self.metrics.record_stream_bytes(
                 uploaded - self._stream_bytes_seen)
             self._stream_bytes_seen = uploaded
+        stats_fn = getattr(self.adapter, "uploader_stats", None)
+        stats = stats_fn() if stats_fn is not None else None
+        if stats is not None:
+            self.metrics.record_uploader_stats(stats)
 
     def _stage_retire(self, ctx: dict) -> None:
         """Per-slot sampling, completion checks, slot release."""

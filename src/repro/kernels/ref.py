@@ -71,6 +71,59 @@ def stream_matmul_ref(x: jax.Array, stream_words, w_tab, s_tab, *,
     return acc.astype(out_dtype)
 
 
+def stream_kv_ref(words_row: np.ndarray, tabs: dict, *,
+                  bits: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side K/V extraction oracle for ``kvcache.stream_attention``.
+
+    ``words_row``: one slot's flat ``(W,)`` u32 page words
+    (:meth:`PackedKVCache.slot_words` row); ``tabs``: the
+    :func:`~repro.kvcache.layout.full_stream_tables` dict.  Returns the
+    dequantized f32 ``(smax, Hkv, hd)`` K and V exactly as the Pallas
+    prologue computes them — extraction and dequantization are a u64
+    funnel shift plus one f32 subtract/multiply each, so equality here
+    is *bit* equality, not allclose.
+    """
+    bias = float(1 << (bits - 1))
+
+    def one(code_tab, scale_tab):
+        codes = _extract_ref(words_row, code_tab.reshape(-1), bits) \
+            .reshape(code_tab.shape)
+        spat = _extract_ref(words_row, scale_tab.reshape(-1), 16) \
+            .reshape(scale_tab.shape)
+        scales = (spat.astype(np.uint32) << 16).view(np.float32)
+        return (codes.astype(np.float32) - bias) * scales[..., None]
+
+    return (one(np.asarray(tabs["k"]), np.asarray(tabs["k_scales"])),
+            one(np.asarray(tabs["v"]), np.asarray(tabs["v_scales"])))
+
+
+def stream_attention_ref(words: np.ndarray, q: np.ndarray, pos: np.ndarray,
+                         tabs: dict, *, bits: int) -> np.ndarray:
+    """Oracle for ``kvcache.stream_attention``: numpy extraction through
+    :func:`stream_kv_ref`, then plain f64 softmax attention.  The
+    extraction half is bit-exact; the attention half is float math in a
+    different summation order, so callers gate the final output with
+    ``allclose`` (the *bit*-identity gate for the kernel is
+    ``decode_attention`` over :meth:`PackedKVCache.dense_kv`)."""
+    words = np.asarray(words)
+    q = np.asarray(q, np.float64)
+    b, _, h, hd = q.shape
+    outs = []
+    for i in range(b):
+        kf, vf = stream_kv_ref(words[i], tabs, bits=bits)
+        smax, hkv, _ = kf.shape
+        rep = h // hkv
+        kc = np.repeat(kf.astype(np.float64), rep, axis=1)
+        vc = np.repeat(vf.astype(np.float64), rep, axis=1)
+        s = np.einsum("qhd,khd->hqk", q[i], kc) * hd ** -0.5
+        s = np.where(np.arange(smax)[None, None, :] <= int(pos[i]),
+                     s, -np.inf)
+        p = np.exp(s - s.max(axis=-1, keepdims=True))
+        p = p / p.sum(axis=-1, keepdims=True)
+        outs.append(np.einsum("hqk,khd->qhd", p, vc))
+    return np.stack(outs, axis=0)
+
+
 def packed_matmul_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
                       *, bits: int, group_size: int) -> jax.Array:
     """Oracle for ``packed_matmul``: unpack everything, then one big dot."""

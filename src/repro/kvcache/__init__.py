@@ -1,0 +1,46 @@
+"""repro.kvcache: Iris-planned packed KV-cache streams.
+
+The paper's layout machinery applied to the first *mutable* stream in
+the repo: per-head quantized K/V token pages planned once per
+``(page_tokens, heads, head_dim, bits, m)`` signature (sequence-length
+independent — appends never re-plan), packed through token-masked
+write tables derived from the device pack kernel, and decoded inside
+the attention prologue by a stream-direct Pallas kernel.
+
+Front doors:
+
+* :class:`PackedKVCache` — the paged pytree container
+  (``create`` / ``append`` / ``reset`` / ``evict`` / ``dense_kv``);
+* :func:`kv_bundle` / :func:`plan_kv_stack` — bundle construction and
+  planning, routed through :func:`repro.api.plan_layer_stack`;
+* :func:`~repro.kvcache.kernels.stream_attention` — the fused decode
+  attention kernel over packed pages.
+"""
+from .cache import (  # noqa: F401
+    KVManifest,
+    PackedKVCache,
+    dequantize_kv,
+    quantize_kv,
+)
+from .kernels import stream_attention, stream_attention_cache  # noqa: F401
+from .layout import (  # noqa: F401
+    append_tables,
+    full_stream_tables,
+    kv_bundle,
+    page_stream_tables,
+    plan_kv_stack,
+)
+
+__all__ = [
+    "KVManifest",
+    "PackedKVCache",
+    "append_tables",
+    "dequantize_kv",
+    "full_stream_tables",
+    "kv_bundle",
+    "page_stream_tables",
+    "plan_kv_stack",
+    "quantize_kv",
+    "stream_attention",
+    "stream_attention_cache",
+]

@@ -1,0 +1,414 @@
+"""PackedKVCache: a mutable Iris-planned KV stream as a jax pytree.
+
+Storage is a single uint32 word tensor
+``pages[n_layers, n_slots, n_pages, c_max, words32]`` — each
+``(c_max, words32)`` block is one token page packed with the per-page
+layout planned by :mod:`repro.kvcache.layout` (the
+:meth:`~repro.core.exec_plan.ExecProgram.buffer_words32` view, so the
+attention prologue and the host analysis passes read the same bytes).
+
+The container mirrors :class:`repro.tree.PackedTree`: the words are the
+only pytree child (``jit`` / ``device_put`` / ``NamedSharding``
+compatible), the frozen :class:`KVManifest` rides as aux data, and the
+layout / program / tables are rebuilt lazily after unflatten via the
+process :class:`~repro.core.iris.LayoutCache` — a cache hit, never a
+scheduler run.
+
+``append`` is the new write path: token codes are placed into a sparse
+piece vector and OR-merged into the slot's current page through the
+token-masked contribution tables of :func:`repro.kvcache.layout.append_tables`
+(``new = (old & ~mask) | value``), i.e. the ``pack_layout_fused``
+gather/shift/OR structure restricted to one token's bits.  Appends are
+pure functional updates (the engine threads the new cache through decode
+state) and never touch the planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.exec_plan import lower_exec
+from repro.core.iris import DEFAULT_CACHE, schedule
+from repro.core.packing import BundleTensor, bundle_problem
+
+from .layout import append_tables, full_stream_tables, plan_kv_stack
+
+__all__ = ["KVManifest", "PackedKVCache", "quantize_kv", "dequantize_kv"]
+
+
+# ----------------------------------------------------------------------
+# quantization (per head-vector: one bf16 scale per (token, head))
+# ----------------------------------------------------------------------
+def quantize_kv(x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """``x: (..., head_dim)`` float -> (codes uint32, scale16 uint32).
+
+    Mirrors :func:`repro.quant.qtypes.quantize` arithmetic with the
+    group fixed to the head vector: symmetric, biased codes, amax/qmax
+    scale computed in f32, stored as a bf16 bit pattern.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    bias = float(2 ** (bits - 1))
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -qmax, qmax)
+    codes = (q + bias).astype(jnp.uint32)
+    sc16 = jax.lax.bitcast_convert_type(
+        scale.astype(jnp.bfloat16), jnp.uint16).astype(jnp.uint32)
+    return codes, sc16
+
+
+def dequantize_kv(codes: jax.Array, sc16: jax.Array, bits: int
+                  ) -> jax.Array:
+    """Inverse of :func:`quantize_kv` against the *stored* bf16 scale."""
+    bias = float(2 ** (bits - 1))
+    scale = jax.lax.bitcast_convert_type(
+        (sc16.astype(jnp.uint32) << 16), jnp.float32)
+    return (codes.astype(jnp.float32) - bias) * scale[..., None]
+
+
+def _extract_words(words: jax.Array, tab: np.ndarray, width: int
+                   ) -> jax.Array:
+    """Funnel-shift gather: ``words (B, W) uint32`` + bit-offset table.
+
+    The :mod:`repro.kernels.stream_matmul` extraction, batched over
+    leading rows: word index ``tab >> 5``, shift ``tab & 31``, hi word
+    completes pieces straddling a u32 boundary.
+    """
+    w_last = words.shape[1] - 1
+    wi = (tab >> 5).astype(np.int32).reshape(-1)
+    sh = jnp.asarray((tab & 31).astype(np.uint32).reshape(-1))
+    lo = jnp.take(words, wi, axis=1)
+    hi = jnp.take(words, np.minimum(wi + 1, w_last), axis=1)
+    v = (lo >> sh) | jnp.where(sh > 0, hi << ((32 - sh) & 31),
+                               jnp.uint32(0))
+    v = v & jnp.uint32((1 << width) - 1)
+    return v.reshape((words.shape[0],) + tab.shape)
+
+
+# ----------------------------------------------------------------------
+# manifest
+# ----------------------------------------------------------------------
+def signature_string(problem) -> str:
+    """JSON-canonical form of ``problem.canonical_signature()`` — the
+    raw signature is a nested tuple, which a JSON round-trip (checkpoint
+    extras) would silently turn into lists and break equality."""
+    return json.dumps(problem.canonical_signature())
+
+
+@dataclasses.dataclass(frozen=True)
+class KVManifest:
+    """Frozen description of a packed KV cache: geometry + layout identity.
+
+    Enough to rebuild the layout (via the process
+    :class:`~repro.core.iris.LayoutCache`, or a fresh scheduler run whose
+    signature is verified against the recorded one) and to interpret the
+    page words — the KV twin of :class:`repro.tree.LayoutManifest`.
+    """
+
+    bits: int
+    page_tokens: int
+    n_kv_heads: int
+    head_dim: int
+    n_layers: int
+    n_slots: int
+    n_pages: int
+    m: int
+    mode: str
+    c_max: int
+    row_bytes: int
+    words32: int
+    bundle: tuple[tuple[str, int, int, int], ...]
+    signature: str
+
+    @property
+    def smax(self) -> int:
+        return self.n_pages * self.page_tokens
+
+    def bundle_tensors(self) -> list[BundleTensor]:
+        return [BundleTensor(*t) for t in self.bundle]
+
+    def elem_widths(self) -> tuple[int, ...]:
+        return tuple(t[1] for t in self.bundle)
+
+    def logical(self) -> tuple[int, ...]:
+        return tuple(t[2] for t in self.bundle)
+
+    def problem(self):
+        return bundle_problem(self.bundle_tensors(), m=self.m)
+
+    def resolve_layout(self, cache=DEFAULT_CACHE):
+        """(layout, provenance) — cache hit or verified scheduler rerun."""
+        prob = self.problem()
+        sig = signature_string(prob)
+        if sig != self.signature:
+            raise ValueError(
+                "KV manifest signature mismatch: recorded "
+                f"{self.signature[:12]}..., rebuilt {sig[:12]}... — the "
+                "manifest does not describe this scheduling instance")
+        if cache is not None:
+            lay = cache.lookup(prob)
+            if lay is not None:
+                return lay, "cache-hit"
+        lay = schedule(prob, mode=self.mode, cache=None)
+        if cache is not None:
+            cache.insert(prob, False, lay)
+        return lay, "manifest"
+
+    def to_json_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["bundle"] = [list(t) for t in self.bundle]
+        return d
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "KVManifest":
+        d = dict(d)
+        d["bundle"] = tuple(
+            (str(n), int(w), int(e), int(s)) for n, w, e, s in d["bundle"])
+        for k in ("bits", "page_tokens", "n_kv_heads", "head_dim",
+                  "n_layers", "n_slots", "n_pages", "m", "c_max",
+                  "row_bytes", "words32"):
+            d[k] = int(d[k])
+        return cls(**d)
+
+
+# ----------------------------------------------------------------------
+# the cache container
+# ----------------------------------------------------------------------
+@jax.tree_util.register_pytree_with_keys_class
+class PackedKVCache:
+    """Paged Iris-packed KV cache for ``n_slots`` continuous-batching rows.
+
+    Functional container: ``append`` / ``reset`` / ``evict`` return new
+    caches sharing the manifest.  Only ``pages`` is a pytree leaf.
+    """
+
+    def __init__(self, pages, manifest: KVManifest,
+                 provenance: str = "created") -> None:
+        self.pages = pages
+        self.manifest = manifest
+        self.provenance = provenance
+        self._layout = None
+        self._program = None
+        self.plan_stats: dict[str, int] = {}
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("pages"), self.pages),), \
+            self.manifest
+
+    @classmethod
+    def tree_unflatten(cls, manifest, children):
+        return cls(children[0], manifest, provenance="pytree")
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def create(cls, cfg, *, bits: int, page_tokens: int, n_slots: int,
+               max_seq: int, n_layers: int | None = None, m: int = 512,
+               mode: str = "auto", cache=None) -> "PackedKVCache":
+        """Plan (through the shared layer-stack planner) and allocate.
+
+        The per-page layout signature is sequence-length-independent:
+        growing ``max_seq`` only adds zeroed pages, and a second
+        ``create`` against a warm :class:`LayoutCache` runs the
+        scheduler zero times (``plan_stats`` records the counters).
+        """
+        stack = plan_kv_stack(cfg, bits=bits, page_tokens=page_tokens,
+                              n_layers=n_layers, m=m, mode=mode,
+                              cache=cache)
+        prog = stack.exec_program()
+        nl = len(stack.plans)
+        n_pages = max(1, math.ceil(max_seq / page_tokens))
+        manifest = KVManifest(
+            bits=bits, page_tokens=page_tokens,
+            n_kv_heads=int(cfg.n_kv_heads), head_dim=int(cfg.head_dim),
+            n_layers=nl, n_slots=int(n_slots), n_pages=int(n_pages),
+            m=int(m), mode=str(mode), c_max=int(prog.c_max),
+            row_bytes=int(prog.row_bytes),
+            words32=int(prog.kernel.words32),
+            bundle=tuple((b.name, b.width_bits, b.n_elems, b.stage)
+                         for b in stack.bundle),
+            signature=signature_string(stack.problem),
+        )
+        pages = jnp.zeros((nl, n_slots, n_pages, prog.c_max,
+                           prog.kernel.words32), jnp.uint32)
+        obj = cls(pages, manifest, provenance=stack.plans[0].provenance)
+        obj._layout = stack.plans[0].layout
+        obj._program = prog
+        obj.plan_stats = {"scheduler_runs": stack.scheduler_runs,
+                          "cache_hits": stack.cache_hits}
+        return obj
+
+    # -- lazy layout/program (rebuilt after unflatten / restore) --------
+    @property
+    def layout(self):
+        if self._layout is None:
+            self._layout, prov = self.manifest.resolve_layout()
+            if self.provenance == "pytree":
+                self.provenance = prov
+        return self._layout
+
+    def program(self):
+        if self._program is None:
+            self._program = lower_exec(self.layout,
+                                       self.manifest.elem_widths())
+        return self._program
+
+    # -- geometry -------------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return self.manifest.n_layers
+
+    @property
+    def n_slots(self) -> int:
+        return self.manifest.n_slots
+
+    @property
+    def n_pages(self) -> int:
+        return self.manifest.n_pages
+
+    @property
+    def smax(self) -> int:
+        return self.manifest.smax
+
+    @property
+    def bits(self) -> int:
+        return self.manifest.bits
+
+    def stream_bytes(self) -> int:
+        """Total packed page bytes resident for the whole cache."""
+        return int(np.prod(self.pages.shape)) * 4
+
+    def _replace_pages(self, pages) -> "PackedKVCache":
+        obj = PackedKVCache(pages, self.manifest,
+                            provenance=self.provenance)
+        obj._layout = self._layout
+        obj._program = self._program
+        obj.plan_stats = self.plan_stats
+        return obj
+
+    # -- write path -----------------------------------------------------
+    def append(self, k: jax.Array, v: jax.Array, pos: jax.Array,
+               slot_ids: jax.Array, *, layer: int) -> "PackedKVCache":
+        """Write one token per active slot into layer ``layer``.
+
+        ``k`` / ``v``: ``(b, n_kv_heads, head_dim)`` float (post-rope);
+        ``pos``: ``(b,)`` token positions being written; ``slot_ids``:
+        ``(b,)`` distinct cache rows.  Jit-traceable (``layer`` static);
+        the planner is never consulted — all tables are lowered-once
+        numpy constants.
+        """
+        man = self.manifest
+        prog = self.program()
+        tabs = append_tables(prog, page_tokens=man.page_tokens,
+                             logical=man.logical())
+        kcodes, ks16 = quantize_kv(k, man.bits)
+        vcodes, vs16 = quantize_kv(v, man.bits)
+        b = kcodes.shape[0]
+        t_in = (pos % man.page_tokens).astype(jnp.int32)
+        page = (pos // man.page_tokens).astype(jnp.int32)
+
+        base = tabs.piece_base
+        per_tok = tabs.per_token
+        n_flat = prog.n_pieces + 1
+
+        def place(kc, ks, vc, vs, t):
+            f = jnp.zeros((n_flat,), jnp.uint32)
+            for ai, vals in zip(range(4), (kc, ks, vc, vs)):
+                start = 1 + base[ai] + t * per_tok[ai]
+                f = jax.lax.dynamic_update_slice(f, vals, (start,))
+            return f
+
+        flat = jax.vmap(place)(kcodes.reshape(b, -1), ks16.reshape(b, -1),
+                               vcodes.reshape(b, -1), vs16.reshape(b, -1),
+                               t_in)
+
+        src = tabs.src.reshape(-1)                     # numpy constants
+        vals = jnp.take(flat, src, axis=1).reshape(
+            (b,) + tabs.src.shape)
+        sl = jnp.asarray(np.maximum(tabs.scode, 0).astype(np.uint32))
+        sr = jnp.asarray(np.maximum(-tabs.scode, 0).astype(np.uint32))
+        left = jnp.asarray(tabs.scode >= 0)
+        shifted = jnp.where(left, vals << sl, vals >> sr)
+        sel = jnp.asarray(tabs.tok)[None] == t_in[:, None, None, None]
+        contrib = jnp.where(sel, shifted, jnp.uint32(0))
+        maskc = jnp.where(sel, jnp.asarray(tabs.maskbits)[None],
+                          jnp.uint32(0))
+        value = contrib[..., 0]
+        mask = maskc[..., 0]
+        for j in range(1, tabs.K):                     # K is tiny, static
+            value = value | contrib[..., j]
+            mask = mask | maskc[..., j]
+
+        pages_l = self.pages[layer]
+        old = pages_l[slot_ids, page]                  # (b, c_max, w32)
+        new = (old & ~mask) | value
+        pages_l = pages_l.at[slot_ids, page].set(new)
+        return self._replace_pages(self.pages.at[layer].set(pages_l))
+
+    # -- slot lifecycle -------------------------------------------------
+    def reset(self, slot_ids) -> "PackedKVCache":
+        """Zero the given slot(s) across every layer and page."""
+        slots = jnp.atleast_1d(jnp.asarray(slot_ids, jnp.int32))
+        return self._replace_pages(self.pages.at[:, slots].set(0))
+
+    def evict(self, slot_ids) -> "PackedKVCache":
+        """Continuous-batching eviction: alias of :meth:`reset`."""
+        return self.reset(slot_ids)
+
+    # -- read path ------------------------------------------------------
+    def slot_words(self, layer: int, slot_ids=None) -> jax.Array:
+        """Flat uint32 word stream per selected slot: ``(b, W)``."""
+        pages_l = self.pages[layer]
+        if slot_ids is not None:
+            pages_l = pages_l[slot_ids]
+        return pages_l.reshape(pages_l.shape[0], -1)
+
+    def stream_tables(self) -> dict[str, np.ndarray]:
+        """Full-sequence bit-offset tables over a slot's pages."""
+        man = self.manifest
+        return full_stream_tables(
+            self.program(), page_tokens=man.page_tokens,
+            n_kv_heads=man.n_kv_heads, head_dim=man.head_dim,
+            n_pages=man.n_pages)
+
+    def dense_kv(self, layer: int, slot_ids=None
+                 ) -> tuple[jax.Array, jax.Array]:
+        """Dequantized dense K/V for the oracle attention path.
+
+        Returns f32 ``(b, smax, n_kv_heads, head_dim)`` pairs — the
+        exact values the stream kernel's prologue dequantizes in
+        registers, materialized (this is what ``stream_attention`` makes
+        unnecessary; it exists as the bit-identity oracle).
+        """
+        man = self.manifest
+        words = self.slot_words(layer, slot_ids)
+        tabs = self.stream_tables()
+        kc = _extract_words(words, tabs["k"], man.bits)
+        ks = _extract_words(words, tabs["k_scales"], 16)
+        vc = _extract_words(words, tabs["v"], man.bits)
+        vs = _extract_words(words, tabs["v_scales"], 16)
+        return (dequantize_kv(kc, ks, man.bits),
+                dequantize_kv(vc, vs, man.bits))
+
+    # -- host views -----------------------------------------------------
+    def host_pages(self) -> np.ndarray:
+        return np.asarray(self.pages)
+
+    def page_rows_u8(self, layer: int, slot: int, page: int) -> np.ndarray:
+        """One page as ``(c_max, row_bytes)`` uint8 rows (analysis view)."""
+        man = self.manifest
+        words = np.asarray(self.pages[layer, slot, page])
+        return np.ascontiguousarray(words).view(np.uint8).reshape(
+            man.c_max, man.words32 * 4)[:, :man.row_bytes]
+
+    def verify(self, **kw) -> Any:
+        from repro import analysis  # lazy
+
+        return analysis.verify_kvcache(self, **kw)

@@ -1,0 +1,7 @@
+"""Pallas kernels for the packed KV-cache subsystem."""
+from .stream_attention import (  # noqa: F401
+    stream_attention,
+    stream_attention_cache,
+)
+
+__all__ = ["stream_attention", "stream_attention_cache"]

@@ -1,0 +1,132 @@
+"""Stream-direct decode attention: Iris KV pages -> registers -> dot.
+
+The K/V prologue consults the exec-plan stream tables the way
+``repro.kernels.stream_matmul`` does: each program instance (one batch
+slot) funnel-shifts its codes and bf16 scale bit patterns straight out
+of the slot's packed page words, dequantizes in registers, and feeds
+the decode attention math — no dense K/V tensor ever exists in HBM.
+
+The attention body reproduces
+:func:`repro.models.attention.decode_attention` op for op (same einsum
+contraction, ``preferred_element_type=f32``, position mask at
+``NEG_INF``, f32 softmax and V contraction) so the kernel's output is
+bit-identical to running the dense path on the materialized dequantized
+K/V — the gate ``tests/test_kvcache.py`` asserts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.models.attention import NEG_INF
+
+
+def _extract(flat: jax.Array, tab: jax.Array, width: int) -> jax.Array:
+    """Funnel-shift ``width``-bit fields of ``flat`` u32 words (in-kernel)."""
+    last = flat.shape[0] - 1
+    wi = (tab >> 5).astype(jnp.int32)
+    sh = (tab & 31).astype(jnp.uint32)
+    lo = jnp.take(flat, wi)
+    hi = jnp.take(flat, jnp.minimum(wi + 1, last))
+    v = (lo >> sh) | jnp.where(sh > 0, hi << ((32 - sh) & 31),
+                               jnp.uint32(0))
+    return v & jnp.uint32((1 << width) - 1)
+
+
+def _dequant(codes, sc16, bits):
+    bias = float(2 ** (bits - 1))
+    scale = jax.lax.bitcast_convert_type(sc16 << 16, jnp.float32)
+    return (codes.astype(jnp.float32) - bias) * scale[..., None]
+
+
+def _attention_kernel(words_ref, q_ref, pos_ref, kt_ref, kst_ref, vt_ref,
+                      vst_ref, o_ref, *, bits, n_heads, smax):
+    flat = words_ref[0]                              # (W,) uint32
+    kf = _dequant(_extract(flat, kt_ref[...], bits),
+                  _extract(flat, kst_ref[...], 16), bits)
+    vf = _dequant(_extract(flat, vt_ref[...], bits),
+                  _extract(flat, vst_ref[...], 16), bits)
+    hkv = kf.shape[1]
+    if hkv != n_heads:                               # GQA replication
+        kf = jnp.repeat(kf, n_heads // hkv, axis=1)
+        vf = jnp.repeat(vf, n_heads // hkv, axis=1)
+    q = q_ref[...].reshape(1, 1, *q_ref.shape[1:])   # (1, 1, H, hd)
+    hd = q.shape[-1]
+    kc = kf[None].astype(q.dtype)                    # (1, smax, H, hd)
+    vc = vf[None].astype(q.dtype)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, smax), 3)
+    s = jnp.where(iota <= pos_ref[0, 0], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vc.astype(jnp.float32))
+    o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_heads",
+                                             "interpret"))
+def stream_attention(words: jax.Array, q: jax.Array, pos: jax.Array,
+                     k_tab: jax.Array, ks_tab: jax.Array,
+                     v_tab: jax.Array, vs_tab: jax.Array, *,
+                     bits: int, n_heads: int,
+                     interpret: bool = True) -> jax.Array:
+    """Decode attention over packed KV pages, one program per slot.
+
+    ``words``: ``(B, W)`` uint32 — each row a slot's concatenated page
+    words (:meth:`repro.kvcache.PackedKVCache.slot_words`);
+    ``q``: ``(B, 1, H, hd)``; ``pos``: ``(B,)`` per-slot positions;
+    tables: full-sequence bit offsets from
+    :func:`repro.kvcache.layout.full_stream_tables` (``k``/``v``:
+    ``(smax, Hkv, hd)``, scales: ``(smax, Hkv)``).  Returns
+    ``(B, 1, H, hd)`` in ``q.dtype``.
+    """
+    b, _, h, hd = q.shape
+    if h != n_heads:
+        raise ValueError(f"q has {h} heads, n_heads={n_heads}")
+    smax = k_tab.shape[0]
+    w = words.shape[1]
+    q3 = q.reshape(b, h, hd)
+    pos2 = pos.reshape(b, 1).astype(jnp.int32)
+    kernel = functools.partial(_attention_kernel, bits=bits,
+                               n_heads=n_heads, smax=smax)
+
+    def full(shape):
+        return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            full(k_tab.shape),
+            full(ks_tab.shape),
+            full(v_tab.shape),
+            full(vs_tab.shape),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(words, q3, pos2, k_tab, ks_tab, v_tab, vs_tab)
+    return out.reshape(b, 1, h, hd)
+
+
+def stream_attention_cache(kvc, q: jax.Array, pos: jax.Array,
+                           slot_ids: jax.Array, *, layer: int,
+                           interpret: bool = True) -> jax.Array:
+    """Convenience front door: gather a :class:`PackedKVCache` layer's
+    active slots and run :func:`stream_attention` against its tables."""
+    tabs = kvc.stream_tables()
+    words = kvc.slot_words(layer, slot_ids)
+    as_dev = {k: jnp.asarray(t) for k, t in tabs.items()}
+    return stream_attention(
+        words, q, pos, as_dev["k"], as_dev["k_scales"], as_dev["v"],
+        as_dev["v_scales"], bits=kvc.bits, n_heads=q.shape[2],
+        interpret=interpret)
+
+
+__all__ = ["stream_attention", "stream_attention_cache"]

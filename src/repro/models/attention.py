@@ -153,6 +153,29 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.astype(q.dtype)
 
 
+def stream_decode_attention(kvc, q: jax.Array, pos: jax.Array,
+                            slot_ids: jax.Array, *, layer: int,
+                            oracle: bool = False,
+                            interpret: bool = True) -> jax.Array:
+    """Decode attention straight off a packed Iris KV stream.
+
+    ``kvc`` is a :class:`repro.kvcache.PackedKVCache`; ``q``:
+    ``(B, 1, H, hd)``; ``pos`` / ``slot_ids``: ``(B,)``.  The default
+    path runs the stream-direct Pallas kernel (packed pages ->
+    registers -> dot, no dense K/V intermediate); ``oracle=True``
+    materializes the dequantized dense K/V and reuses
+    :func:`decode_attention` — bit-identical by construction, kept as
+    the verification path.
+    """
+    if oracle:
+        kf, vf = kvc.dense_kv(layer, slot_ids)
+        return decode_attention(q, kf, vf, pos)
+    from repro.kvcache.kernels import stream_attention_cache  # lazy
+
+    return stream_attention_cache(kvc, q, pos, slot_ids, layer=layer,
+                                  interpret=interpret)
+
+
 # ----------------------------------------------------------------------
 # attention block entry points
 # ----------------------------------------------------------------------

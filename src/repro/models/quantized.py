@@ -106,7 +106,9 @@ def _pmm_direct(x2d, pp, name, layer, interpret, words=None):
 def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
                        tokens: jax.Array, *, interpret: bool = True,
                        weights: str = "auto", slot_ids=None,
-                       stream_source=None) -> tuple[jax.Array, dict]:
+                       stream_source=None, kv: str = "dense",
+                       kv_attention: str = "stream"
+                       ) -> tuple[jax.Array, dict]:
     """One decode token with dequant-on-load weights (dense archs).
 
     ``pp`` is the :class:`~repro.tree.PackedTree` built by
@@ -136,6 +138,14 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
     :class:`~repro.engine.streams.StreamUploader` staging host->device
     uploads ahead of compute.  ``None`` reads the tree's resident
     buffers.
+
+    ``kv`` selects the cache representation: ``"dense"`` keeps the
+    legacy bf16 ``k_cache`` / ``v_cache`` tensors; ``"packed"`` streams
+    K/V through the Iris-planned :class:`~repro.kvcache.PackedKVCache`
+    carried in ``state["packed_kv"]`` — appends write packed token
+    pages, and attention consumes them via the stream-direct Pallas
+    kernel (``kv_attention="stream"``) or the materialized dequant
+    oracle (``kv_attention="dense"``, bit-identical by construction).
     """
     from . import attention as attn
 
@@ -143,6 +153,20 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
         raise ValueError(
             f"weights must be 'auto', 'packed' or 'stream'; got {weights!r}"
         )
+    if kv not in ("dense", "packed"):
+        raise ValueError(f"kv must be 'dense' or 'packed'; got {kv!r}")
+    if kv_attention not in ("stream", "dense"):
+        raise ValueError(
+            f"kv_attention must be 'stream' or 'dense'; got {kv_attention!r}"
+        )
+    kvc = None
+    if kv == "packed":
+        kvc = state.get("packed_kv")
+        if kvc is None:
+            raise ValueError(
+                "kv='packed' needs a PackedKVCache in state['packed_kv'] "
+                "(see repro.kvcache.PackedKVCache.create)"
+            )
     use_stream = weights == "stream" or (weights == "auto" and not pp.packed)
     if weights == "packed" and not pp.packed:
         raise ValueError(
@@ -196,14 +220,20 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
         pos_b = pos[:, None]
         q = attn.apply_rope(q, pos_b, inv_freq, cfg.mrope_sections)
         kk = attn.apply_rope(kk, pos_b, inv_freq, cfg.mrope_sections)
-        kc = k_cache[layer].at[rows, pos].set(
-            kk[:, 0].astype(k_cache.dtype))
-        vc = v_cache[layer].at[rows, pos].set(
-            vv[:, 0].astype(v_cache.dtype))
-        new_k.append(kc)
-        new_v.append(vc)
-        att = attn.decode_attention(q.astype(jnp.bfloat16), kc[rows],
-                                    vc[rows], pos)
+        if kvc is not None:
+            kvc = kvc.append(kk[:, 0], vv[:, 0], pos, rows, layer=layer)
+            att = attn.stream_decode_attention(
+                kvc, q.astype(jnp.bfloat16), pos, rows, layer=layer,
+                oracle=kv_attention == "dense", interpret=interpret)
+        else:
+            kc = k_cache[layer].at[rows, pos].set(
+                kk[:, 0].astype(k_cache.dtype))
+            vc = v_cache[layer].at[rows, pos].set(
+                vv[:, 0].astype(v_cache.dtype))
+            new_k.append(kc)
+            new_v.append(vc)
+            att = attn.decode_attention(q.astype(jnp.bfloat16), kc[rows],
+                                        vc[rows], pos)
         y = mm("attn/wo", layer, att.reshape(b, h * hd), words)
         if cfg.use_bias:
             y = y + pp.other["attn/bo"][layer]
@@ -227,8 +257,11 @@ def packed_decode_step(cfg: ModelConfig, pp: "PackedTree", state: dict,
     else:
         logits = x @ pp.other["unembed"]
     new_state = dict(state)
-    new_state["k_cache"] = jnp.stack(new_k)
-    new_state["v_cache"] = jnp.stack(new_v)
+    if kvc is not None:
+        new_state["packed_kv"] = kvc
+    else:
+        new_state["k_cache"] = jnp.stack(new_k)
+        new_state["v_cache"] = jnp.stack(new_v)
     if slot_ids is None:
         new_state["pos"] = pos + 1
     else:

@@ -126,6 +126,60 @@ def two_pass_oracle(x, lay, prog, buf, bits: int, group_size: int,
 
 
 # ----------------------------------------------------------------------
+# packed KV-cache random-walk oracle (deterministic + property suites)
+# ----------------------------------------------------------------------
+def run_kv_walk(bits, hd, ops, seed, *, page_tokens=4, n_slots=3,
+                max_seq=8):
+    """Replay append/reset ``ops`` against a PackedKVCache and a dense
+    numpy mirror of the quantize -> dequantize values, then assert the
+    packed pages decode bit-exactly to the mirror.
+
+    ``ops``: sequence of ``("reset", slot)`` or ``("append", [slots])``.
+    Each slot keeps its own clock (continuous batching); appends past
+    capacity are dropped.  Shared by the always-on seeded subset in
+    test_kvcache.py and the hypothesis walk in test_kvcache_property.py.
+    """
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.kvcache import PackedKVCache, dequantize_kv, quantize_kv
+
+    cfg = get_config("smollm-135m").reduced(
+        n_layers=1, n_heads=4, n_kv_heads=2, head_dim=hd, d_model=4 * hd,
+        d_ff=64, vocab_size=64)
+    rng = np.random.default_rng(seed)
+    kvc = PackedKVCache.create(cfg, bits=bits, page_tokens=page_tokens,
+                               n_slots=n_slots, max_seq=max_seq)
+    smax = kvc.smax
+    want_k = np.zeros((n_slots, smax, 2, hd), np.float32)
+    want_v = np.zeros_like(want_k)
+    clock = [0] * n_slots
+    for op, arg in ops:
+        if op == "reset":
+            kvc = kvc.reset(arg)
+            want_k[arg] = want_v[arg] = 0.0
+            clock[arg] = 0
+            continue
+        slots = [s for s in arg if clock[s] < smax]
+        if not slots:
+            continue
+        k = jnp.asarray(rng.normal(size=(len(slots), 2, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(len(slots), 2, hd)), jnp.float32)
+        pos = jnp.asarray([clock[s] for s in slots], jnp.int32)
+        kvc = kvc.append(k, v, pos, jnp.asarray(slots, jnp.int32), layer=0)
+        kq = np.asarray(dequantize_kv(*quantize_kv(k, bits), bits))
+        vq = np.asarray(dequantize_kv(*quantize_kv(v, bits), bits))
+        for i, s in enumerate(slots):
+            want_k[s, clock[s]] = kq[i]
+            want_v[s, clock[s]] = vq[i]
+            clock[s] += 1
+    kf, vf = kvc.dense_kv(0)
+    np.testing.assert_array_equal(np.asarray(kf), want_k)
+    np.testing.assert_array_equal(np.asarray(vf), want_v)
+    return kvc
+
+
+# ----------------------------------------------------------------------
 # golden-file serialization
 # ----------------------------------------------------------------------
 def serialize_exec_program(prog) -> dict:

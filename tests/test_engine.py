@@ -502,4 +502,69 @@ def test_engine_with_uploader_bit_identical(packed_setup):
     assert uploaded == base
     # stream-bytes accounting flowed into the metrics
     assert eng.metrics.stream_bytes == up.bytes_uploaded
-    assert eng.metrics.snapshot()["throughput"]["stream_bytes"] > 0
+    snap = eng.metrics.snapshot()
+    assert snap["throughput"]["stream_bytes"] > 0
+    # the full uploader counter dict rides in the snapshot too
+    want = up.stats()
+    got = snap["throughput"]["uploader"]
+    assert got["uploads"] == want["uploads"] > 0
+    assert got["bytes_uploaded"] == want["bytes_uploaded"] == \
+        up.bytes_uploaded
+    assert got["prefetch_hits"] == want["prefetch_hits"] > 0
+    assert got["ring_depth"] == 2
+
+
+def test_engine_without_uploader_snapshot_has_empty_uploader_dict():
+    snap = _stub_engine().metrics.snapshot()
+    assert snap["throughput"]["uploader"] == {}
+
+
+def test_engine_resets_fallback_warning_state():
+    """Constructing an Engine clears the once-per-process host-fallback
+    warning sets in *both* kernel modules, so a fresh serving run warns
+    again instead of inheriting a stale silence."""
+    from repro.kernels import layout_decode, layout_pack
+
+    layout_decode._FALLBACK_WARNED.add(("stale", "w"))
+    layout_pack._FALLBACK_WARNED.add(("stale", "w"))
+    _stub_engine()
+    assert not layout_decode._FALLBACK_WARNED
+    assert not layout_pack._FALLBACK_WARNED
+
+
+@pytest.mark.parametrize("bits", [3, 4])
+def test_engine_packed_kv_stream_bit_identical_to_dense_oracle(
+        packed_setup, bits):
+    """Engine-level KV acceptance gate: serving on the packed KV cache
+    with the stream-direct attention kernel produces tokens
+    bit-identical to the materialized dense-dequant oracle over the same
+    pages, across ragged admission (3 requests on 2 slots), and the
+    appends never touch the planner."""
+    from repro.core.iris import DEFAULT_CACHE
+    from repro.engine import PackedAdapter
+
+    cfg, model, trees = packed_setup
+    tree = trees[bits]
+
+    def run(kv_attention):
+        reqs = [EngineRequest(uid=0, prompt=[5, 9], max_new_tokens=2),
+                EngineRequest(uid=1, prompt=[17, 3, 8], max_new_tokens=3),
+                EngineRequest(uid=2, prompt=[40], max_new_tokens=2)]
+        eng = Engine(PackedAdapter(cfg, tree, kv="packed",
+                                   kv_attention=kv_attention,
+                                   page_tokens=8),
+                     EngineConfig(batch_size=2, max_seq=32))
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run_until_drained()
+        assert stats.completed == 3
+        return [r.generated for r in reqs], eng
+
+    stream, eng = run("stream")
+    kvc = eng.state["packed_kv"]
+    assert kvc.plan_stats["scheduler_runs"] <= 1
+    misses0 = DEFAULT_CACHE.misses
+    dense, _ = run("dense")
+    assert stream == dense
+    # the whole second serve (create + every append) re-used the layout
+    assert DEFAULT_CACHE.misses == misses0

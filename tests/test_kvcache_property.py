@@ -1,0 +1,50 @@
+"""Property suite for the packed KV-cache append path.
+
+Random append/evict/reset walks against a dense numpy mirror of the
+quantize -> dequantize values (the walk harness lives in conftest, so
+the seeded deterministic subset in test_kvcache.py still runs where
+hypothesis is not installed; this module skips gracefully there).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from conftest import run_kv_walk  # noqa: E402
+
+N_SLOTS = 3
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("reset"), st.integers(0, N_SLOTS - 1)),
+        st.tuples(st.just("append"),
+                  st.lists(st.integers(0, N_SLOTS - 1), min_size=1,
+                           max_size=N_SLOTS, unique=True).map(sorted)),
+    ),
+    max_size=14,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([3, 4, 8]), hd=st.sampled_from([4, 5, 6]),
+       walk=ops, seed=st.integers(0, 2**16 - 1))
+def test_random_walk_matches_dense_oracle(bits, hd, walk, seed):
+    """Any interleaving of ragged appends and slot resets leaves pages
+    that decode bit-exactly to the quantize->dequantize mirror."""
+    run_kv_walk(bits, hd, walk, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.sampled_from([3, 4]), seed=st.integers(0, 2**16 - 1),
+       n=st.integers(1, 8))
+def test_full_fill_then_evict_is_pristine(bits, seed, n):
+    """Filling to capacity then evicting every slot returns a cache
+    indistinguishable from a fresh one (no residue in padding bits)."""
+    walk = [("append", list(range(N_SLOTS)))] * n + \
+        [("reset", s) for s in range(N_SLOTS)]
+    kvc = run_kv_walk(bits, 5, walk, seed)
+    assert not np.asarray(kvc.pages).any()
